@@ -1,0 +1,30 @@
+"""Fig 9 / Exp-7: chunk-size vs build time and retrieval quality."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import BENCH_CFG, bench_corpus, csv_row, \
+    evaluate_qa, make_embedder, timed_call
+from repro.core.erarag import EraRAG
+
+
+def run(n_docs: int = 60,
+        chunk_sizes=(16, 32, 64, 128)) -> List[str]:
+    rows: List[str] = []
+    corpus = bench_corpus(n_docs=n_docs)
+    for ct in chunk_sizes:
+        cfg = dataclasses.replace(BENCH_CFG, chunk_tokens=ct)
+        sys_ = EraRAG(cfg, make_embedder(cfg))
+        dt, _ = timed_call(sys_.insert_docs, corpus.docs)
+        s = evaluate_qa(sys_, corpus.qa, limit=80)
+        rows.append(csv_row(
+            f"chunk_size/{ct}", 1e6 * dt,
+            f"acc={s.accuracy:.3f};rec={s.recall:.3f};"
+            f"build_s={dt:.2f};tokens={sys_.total_tokens}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,81 @@
+"""Shared benchmark infrastructure: systems, corpora, QA scoring.
+
+Metrics follow the paper (§IV Metric): a prediction is *correct* if it
+contains the gold answer (Accuracy, via the reader); *Recall* measures
+whether the gold answer text was retrieved into the context at all.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.common.config import EraRAGConfig
+from repro.core.baselines import BM25, GraphRAGLike, RaptorLike, \
+    VanillaRAG
+from repro.core.erarag import EraRAG
+from repro.data.corpus import QAItem, SyntheticCorpus
+from repro.embed.hashing import HashingEmbedder
+from repro.serving.rag_pipeline import ExtractiveReader, RAGPipeline
+
+BENCH_CFG = EraRAGConfig(embed_dim=128, n_hyperplanes=10, s_min=4,
+                         s_max=12, max_layers=3, chunk_tokens=32,
+                         top_k=8, token_budget=1024)
+
+
+def make_embedder(cfg: EraRAGConfig = BENCH_CFG) -> HashingEmbedder:
+    return HashingEmbedder(dim=cfg.embed_dim)
+
+
+SYSTEMS: Dict[str, Callable] = {
+    "erarag": lambda cfg=BENCH_CFG: EraRAG(cfg, make_embedder(cfg)),
+    "vanilla": lambda cfg=BENCH_CFG: VanillaRAG(cfg, make_embedder(cfg)),
+    "bm25": lambda cfg=BENCH_CFG: BM25(cfg),
+    "raptor": lambda cfg=BENCH_CFG: RaptorLike(cfg, make_embedder(cfg)),
+    "graphrag": lambda cfg=BENCH_CFG: GraphRAGLike(cfg,
+                                                   make_embedder(cfg)),
+}
+
+
+@dataclass
+class QAScore:
+    accuracy: float
+    recall: float
+    n: int
+
+
+def evaluate_qa(system, qa_items: List[QAItem],
+                reader: Optional[ExtractiveReader] = None,
+                limit: int = 120) -> QAScore:
+    reader = reader or ExtractiveReader()
+    items = qa_items[:limit]
+    correct = 0
+    recalled = 0
+    for qa in items:
+        res = system.query(qa.question)
+        ctx = res.context
+        if qa.kind == "multihop" and isinstance(system, EraRAG):
+            ans, r2 = reader.answer_multihop(qa.question, system)
+            ctx = ctx + "\n" + r2.context
+        else:
+            ans = reader.answer(qa.question, ctx)
+        correct += qa.answer in ans
+        recalled += qa.answer in ctx
+    n = max(1, len(items))
+    return QAScore(accuracy=correct / n, recall=recalled / n, n=n)
+
+
+def timed_call(fn, *args, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out
+
+
+def bench_corpus(n_docs: int = 80, seed: int = 0) -> SyntheticCorpus:
+    return SyntheticCorpus.generate(n_docs=n_docs, n_topics=6,
+                                    sentences_per_doc=14,
+                                    facts_per_doc=4, seed=seed)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,38 @@
+"""Table IV / Exp-3: effect of initial graph coverage on final quality.
+
+Vary the initially-built fraction 0%..100%, insert the rest
+incrementally, evaluate the final graph.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row, \
+    evaluate_qa
+
+
+def run(n_docs: int = 60,
+        fractions=(0.0, 0.25, 0.5, 0.75, 1.0)) -> List[str]:
+    rows: List[str] = []
+    corpus = bench_corpus(n_docs=n_docs)
+    finals = {}
+    for frac in fractions:
+        sys_ = SYSTEMS["erarag"]()
+        init, rest = corpus.split(frac)
+        if init:
+            sys_.insert_docs(init)
+        # insert remainder in 5 rounds
+        per = max(1, len(rest) // 5)
+        for i in range(0, len(rest), per):
+            sys_.insert_docs(rest[i:i + per])
+        s = evaluate_qa(sys_, corpus.qa, limit=80)
+        finals[frac] = s
+        rows.append(csv_row(
+            f"initial_coverage/frac_{int(frac * 100):03d}", 0.0,
+            f"acc={s.accuracy:.3f};rec={s.recall:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,80 @@
+"""Roofline report: reads dry-run JSONs -> per-cell 3-term table.
+
+Adds MODEL_FLOPS (6*N*D for dense LM train, 6*N_active*D for MoE) and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPS per the §Roofline
+deliverable.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.common.registry import get_arch
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_arch(arch)
+    shape = cfg.shape(shape_name)
+    if cfg.family in ("lm-dense", "lm-moe"):
+        n = cfg.active_param_count() if cfg.family == "lm-moe" \
+            else cfg.param_count()
+        if shape.kind == "training":
+            tokens = shape.global_batch * shape.seq_len
+            return 6.0 * n * tokens
+        if shape.kind == "inference-prefill":
+            tokens = shape.global_batch * shape.seq_len
+            return 2.0 * n * tokens
+        # decode: 1 token/sequence + attention over the cache
+        tokens = shape.global_batch
+        attn = (2.0 * 2.0 * shape.global_batch * cfg.n_layers *
+                cfg.n_heads * cfg.d_head * shape.seq_len)
+        return 2.0 * n * tokens + attn
+    if cfg.family == "gnn":
+        # per edge: 5 dxd matmuls fwd (x3 for train w/ bwd)
+        n_e = shape.n_edges or (shape.batch_nodes * 150)
+        mult = 3 if shape.is_training else 1
+        return mult * 2.0 * 5 * n_e * cfg.d_hidden ** 2 * cfg.n_layers
+    # recsys: embedding + mlp per example
+    b = shape.n_candidates if shape.kind == "retrieval-scoring" \
+        else shape.batch
+    return 2.0 * cfg.param_count() / max(1, sum(cfg.vocab_sizes)) * b \
+        + 2.0 * b * sum(a * bb for a, bb in zip(
+            (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims,
+            cfg.mlp_dims + (1,)))
+
+
+def run(results_dir: str = "results/dryrun") -> List[str]:
+    rows: List[str] = []
+    files = sorted(glob.glob(f"{results_dir}/*.json"))
+    if not files:
+        return [csv_row("roofline/missing", 0.0,
+                        "run launch.dryrun first")]
+    for f in files:
+        r = json.load(open(f))
+        t = r["roofline"]
+        n_chips = t["n_chips"]
+        mf = model_flops(r["arch"], r["shape"]) / n_chips
+        hlo = max(r["flops_per_device"], 1.0)
+        dom_t = max(t["t_compute_s"], t["t_memory_s"],
+                    t["t_collective_s"])
+        frac = t["t_compute_s"] / dom_t if dom_t else 0.0
+        mesh = "pod2" if r["multi_pod"] else "pod1"
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+            1e6 * dom_t,
+            f"bottleneck={t['bottleneck']};"
+            f"t_comp={t['t_compute_s']:.3e};"
+            f"t_mem={t['t_memory_s']:.3e};"
+            f"t_coll={t['t_collective_s']:.3e};"
+            f"model_flops_ratio={mf / hlo:.2f};"
+            f"roofline_frac={frac:.3f};"
+            f"peak_gib={r['memory']['peak_bytes'] / 2**30:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
+stderr).  ``python -m benchmarks.run [--fast] [--only NAME]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora for CI-speed runs")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        chunk_size,
+        dynamic_insertion,
+        incremental_quality,
+        initial_coverage,
+        kernel_bench,
+        roofline,
+        segment_size,
+        small_update,
+        static_qa,
+        update_breakdown,
+    )
+
+    n = 40 if args.fast else 80
+    suites = {
+        "static_qa": lambda: static_qa.run(n_docs=n),
+        "dynamic_insertion": lambda: dynamic_insertion.run(n_docs=n),
+        "incremental_quality": lambda: incremental_quality.run(
+            n_docs=n),
+        "small_update": lambda: small_update.run(n_docs=n),
+        "initial_coverage": lambda: initial_coverage.run(
+            n_docs=max(40, n // 2)),
+        "segment_size": lambda: segment_size.run(n_docs=max(40, n // 2)),
+        "update_breakdown": lambda: update_breakdown.run(n_docs=n),
+        "chunk_size": lambda: chunk_size.run(n_docs=max(40, n // 2)),
+        "kernel_bench": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        print(f"[{name}]", file=sys.stderr, flush=True)
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

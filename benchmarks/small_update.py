@@ -1,0 +1,61 @@
+"""Fig 6 / Exp-1: single-entry insertion cost (fine-grained updates).
+
+One document inserted into a 50%-built graph, measured at TWO corpus
+scales.  The paper's claim is a scaling law: EraRAG's update cost is
+O(delta * L) — constant in corpus size — while rebuild-based baselines
+pay O(|C|).  We assert both halves: EraRAG's single-entry tokens stay
+flat as the corpus doubles; baselines' grow; and the cross-system gap
+at the larger scale exceeds 4x (the paper reports 1-2 orders of
+magnitude at its 100x-larger corpora).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row, \
+    timed_call
+
+
+def _single_entry_cost(name: str, n_docs: int) -> Tuple[int, float]:
+    corpus = bench_corpus(n_docs=n_docs)
+    sys_ = SYSTEMS[name]()
+    init, rest = corpus.split(0.5)
+    sys_.insert_docs(init)
+    dt, rep = timed_call(sys_.insert_docs, rest[:1])
+    return rep.tokens_total, dt
+
+
+def run(n_docs: int = 80,
+        systems=("erarag", "raptor", "graphrag")) -> List[str]:
+    scales = (max(100, n_docs), max(100, n_docs) * 2)
+    rows: List[str] = []
+    cost: Dict[Tuple[str, int], int] = {}
+    for name in systems:
+        for n in scales:
+            tokens, dt = _single_entry_cost(name, n)
+            cost[(name, n)] = tokens
+            rows.append(csv_row(
+                f"small_update/{name}_n{n}", 1e6 * dt,
+                f"tokens={tokens}"))
+
+    lo, hi = scales
+    era_growth = cost[("erarag", hi)] / max(1, cost[("erarag", lo)])
+    rows.append(csv_row("small_update/erarag_scale_growth", 0.0,
+                        f"x{era_growth:.2f}_when_corpus_x2"))
+    assert era_growth < 1.6, \
+        f"EraRAG update cost must be ~O(delta), grew {era_growth:.2f}x"
+    for other in ("raptor", "graphrag"):
+        growth = cost[(other, hi)] / max(1, cost[(other, lo)])
+        ratio = cost[(other, hi)] / max(1, cost[("erarag", hi)])
+        rows.append(csv_row(
+            f"small_update/{other}_vs_erarag_n{hi}", 0.0,
+            f"token_ratio={ratio:.1f}x;scale_growth=x{growth:.2f}"))
+        assert growth > 1.5, f"{other} rebuild should scale with |C|"
+        assert ratio > 4.0, f"expected O(|C|) vs O(delta) gap at " \
+                            f"n={hi}, got {ratio:.1f}x vs {other}"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

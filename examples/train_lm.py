@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the reduced-but-real stack: data pipeline -> transformer ->
+AdamW + cosine -> checkpointing, with resume support.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.common.config import LMConfig
+from repro.data.pipeline import synthetic_lm_batches
+from repro.models import transformer as T
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import cosine_schedule
+
+
+def small_lm() -> LMConfig:
+    """~100M params: 8L x 512d x 8H, vocab 32k."""
+    return LMConfig(
+        name="demo-100m", family="lm-dense", n_layers=8, d_model=512,
+        n_heads=8, n_kv_heads=4, d_ff=2048, vocab_size=32000,
+        max_seq_len=512)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", type=str, default="/tmp/repro-ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = small_lm()
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params")
+
+    make_batch = synthetic_lm_batches(cfg.vocab_size, args.batch,
+                                      args.seq, seed=0)
+    result = run_training(
+        lambda p, b: T.loss_fn(p, b, cfg),
+        params, make_batch,
+        LoopConfig(max_steps=args.steps, ckpt_every=100,
+                   ckpt_dir=args.ckpt, log_every=20,
+                   n_microbatches=2),
+        resume=args.resume,
+        lr_schedule=cosine_schedule(3e-4, warmup=20,
+                                    total=args.steps))
+    print(f"finished at step {result.final_step}: "
+          f"loss {result.losses[0]:.3f} -> {result.losses[-1]:.3f} "
+          f"({result.wall_time_s:.1f}s, "
+          f"{result.straggler_steps} straggler steps)")
+    assert result.losses[-1] < result.losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: EraRAG as a production multi-pod JAX framework."""

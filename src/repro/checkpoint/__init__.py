@@ -1,0 +1,5 @@
+"""Checkpointing: sharded npz save/restore, async writer, manifests."""
+from repro.checkpoint.store import CheckpointManager, load_checkpoint, \
+    save_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,28 @@
+"""Common substrate: configs, registry, sharding rules, tree/PRNG utils."""
+from repro.common.config import (
+    ArchConfig,
+    EraRAGConfig,
+    GNNConfig,
+    LMConfig,
+    MoEConfig,
+    RecSysConfig,
+    ShapeSpec,
+)
+from repro.common.registry import get_arch, list_archs, register_arch
+from repro.common.sharding import LogicalRules, logical_sharding, named_sharding
+
+__all__ = [
+    "ArchConfig",
+    "EraRAGConfig",
+    "GNNConfig",
+    "LMConfig",
+    "MoEConfig",
+    "RecSysConfig",
+    "ShapeSpec",
+    "get_arch",
+    "list_archs",
+    "register_arch",
+    "LogicalRules",
+    "logical_sharding",
+    "named_sharding",
+]

@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Configs register themselves at import time; ``get_arch`` lazily imports
+``repro.configs`` so callers never need to worry about import order.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.common.config import ArchConfig
+
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register_arch(name: str):
+    """Decorator: register a zero-arg factory returning an ArchConfig."""
+
+    def deco(fn: Callable[[], ArchConfig]):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate arch registration: {name}")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    if not _REGISTRY:
+        importlib.import_module("repro.configs")
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]()
+    assert cfg.name == name, f"config name {cfg.name!r} != key {name!r}"
+    return cfg
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate arrays with *logical* axis names ("batch", "embed",
+"heads", "vocab", ...).  A ``LogicalRules`` table maps logical names to
+mesh axes.  ``logical_sharding`` resolves a (shape, logical_axes) pair to
+a ``NamedSharding``; any dim whose size is not divisible by the mesh-axis
+product falls back to replication for that dim.  This fallback is what
+lets archs like phi3 (40 heads, model=16) compile cleanly: the rule
+engine shards what it can and replicates the rest, and the audit log
+records every fallback so sharding regressions are visible.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger(__name__)
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+class LogicalRules:
+    """Ordered logical-name -> mesh-axes mapping."""
+
+    def __init__(self, rules: Sequence[Tuple[str, MeshAxes]]):
+        self._rules: Dict[str, MeshAxes] = {}
+        for name, axes in rules:
+            if isinstance(axes, str):
+                axes = (axes,)
+            self._rules[name] = axes
+        self.fallbacks: List[Tuple[str, int, str]] = []  # audit log
+
+    def mesh_axes_for(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self._rules.get(logical)
+
+    def extend(self, rules: Sequence[Tuple[str, MeshAxes]]) -> "LogicalRules":
+        merged = list(self._rules.items()) + list(rules)
+        return LogicalRules(merged)
+
+    def spec(self, mesh: Mesh, shape: Sequence[int],
+             logical_axes: Sequence[Optional[str]]) -> P:
+        """Resolve to a PartitionSpec, applying divisibility fallback."""
+        assert len(shape) == len(logical_axes), (shape, logical_axes)
+        used: set = set()
+        out: List[MeshAxes] = []
+        for dim, logical in zip(shape, logical_axes):
+            axes = self.mesh_axes_for(logical)
+            if axes is None:
+                out.append(None)
+                continue
+            # drop axes already consumed by an earlier dim of this array
+            axes = tuple(a for a in axes if a not in used and a in
+                         mesh.shape)
+            if not axes:
+                out.append(None)
+                continue
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if dim % prod != 0:
+                # try progressively shorter prefixes before replicating
+                ok: Tuple[str, ...] = ()
+                p = 1
+                for a in axes:
+                    if dim % (p * mesh.shape[a]) == 0:
+                        p *= mesh.shape[a]
+                        ok = ok + (a,)
+                    else:
+                        break
+                if ok:
+                    out.append(ok)
+                    used.update(ok)
+                else:
+                    self.fallbacks.append((str(logical), dim,
+                                           "->replicated"))
+                    out.append(None)
+                continue
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        return P(*out)
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def logical_sharding(mesh: Mesh, rules: LogicalRules,
+                     shape: Sequence[int],
+                     logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(mesh, shape, logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Per-family default rule tables.  Axis names follow MaxText conventions.
+# ---------------------------------------------------------------------------
+
+def lm_rules(decode: bool = False, long_context: bool = False) -> LogicalRules:
+    """LM transformer rules.
+
+    Training/prefill: batch over (pod, data); mlp + heads + vocab over
+    model.  Decode: KV-cache sequence dim over model (split-K /
+    flash-decoding analogue); long-context batch=1 shards KV seq over
+    (data, model) too.
+    """
+    kv_seq: MeshAxes
+    if long_context:
+        kv_seq = ("pod", "data", "model")
+    elif decode:
+        kv_seq = ("model",)
+    else:
+        kv_seq = None
+    return LogicalRules([
+        ("batch", ("pod", "data")),
+        ("seq", None),
+        ("kv_seq", kv_seq),
+        # weights have no batch dim, so "embed" -> data gives FSDP/ZeRO-3
+        # weight+optimizer sharding; activations (batch leads) have
+        # already consumed the data axis and keep embed replicated.
+        ("embed", ("pod", "data")),
+        ("mlp", ("model",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("qkv_fused", ("model",)),
+        ("head_dim", None),
+        ("vocab", ("model",)),
+        ("experts", ("model",)),
+        ("tokens", ("pod", "data")),
+        ("expert_mlp", ("pod", "data")),
+        ("expert_embed", None),
+        ("layers", None),
+    ])
+
+
+def gnn_rules() -> LogicalRules:
+    return LogicalRules([
+        ("edges", ("pod", "data", "model")),
+        ("nodes", ("model",)),
+        ("node_feat", None),
+        ("hidden", None),
+        ("batch", ("pod", "data")),
+        ("layers", None),
+    ])
+
+
+def recsys_rules(serving: bool = False) -> LogicalRules:
+    """§Perf HC3: retrieval serving replicates the embedding table.
+
+    Row-sharded tables turn every candidate lookup into an all-to-all;
+    for read-only serving replicas the table (vocab x dim, O(100 MB))
+    fits HBM comfortably and replication removes the gather collective
+    entirely.  Training keeps row sharding (tables take optimizer
+    state there)."""
+    return LogicalRules([
+        ("batch", ("pod", "data")),
+        ("vocab_rows", None if serving else ("model",)),
+        ("embed", None),
+        ("mlp", ("model",)),
+        ("candidates", ("data", "model")),
+        ("seq", None),
+        ("layers", None),
+    ])
+
+
+def rules_for_family(family: str, shape_kind: str = "") -> LogicalRules:
+    if family in ("lm-dense", "lm-moe"):
+        return lm_rules(decode=shape_kind in ("inference-decode",
+                                              "long-context-decode"),
+                        long_context=shape_kind == "long-context-decode")
+    if family == "gnn":
+        return gnn_rules()
+    if family == "recsys":
+        return recsys_rules(serving=shape_kind in (
+            "online-inference", "offline-scoring",
+            "retrieval-scoring"))
+    raise ValueError(f"unknown family {family}")

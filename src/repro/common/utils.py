@@ -1,0 +1,60 @@
+"""Small shared utilities: PRNG discipline, pytree helpers, timers."""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def key_for(seed: int, *path: Any) -> jax.Array:
+    """Deterministic named PRNG keys: fold a readable path into a seed.
+
+    Workers can reproduce any stream from (seed, path) — the basis of the
+    deterministic-resharding fault-tolerance story (DESIGN.md §4).
+    """
+    k = jax.random.PRNGKey(seed)
+    for p in path:
+        h = np.uint32(abs(hash(str(p))) % (2**31 - 1))
+        k = jax.random.fold_in(k, h)
+    return k
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))
+
+
+def tree_param_count(tree: Any) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+@contextlib.contextmanager
+def timed(store: Dict[str, float], name: str) -> Iterator[None]:
+    t0 = time.perf_counter()
+    yield
+    store[name] = store.get(name, 0.0) + time.perf_counter() - t0
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}PiB"
+
+
+def ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

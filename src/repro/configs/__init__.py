@@ -1,0 +1,18 @@
+"""Assigned architecture configs (``--arch <id>``).
+
+Importing this package registers all 10 architectures + the paper's own
+EraRAG config defaults.
+"""
+from repro.configs import (  # noqa: F401
+    dcn_v2,
+    deepfm,
+    deepseek_moe_16b,
+    dien,
+    gatedgcn,
+    llama3_8b,
+    llama4_maverick,
+    mind,
+    phi3_medium,
+    qwen2_7b,
+)
+from repro.configs.erarag import ERARAG_DEFAULT  # noqa: F401

@@ -1,0 +1,13 @@
+"""The paper's own system config (EraRAG hyper-parameters)."""
+from repro.common.config import EraRAGConfig
+
+ERARAG_DEFAULT = EraRAGConfig(
+    n_hyperplanes=12,
+    s_min=4,
+    s_max=12,
+    max_layers=4,
+    embed_dim=256,
+    chunk_tokens=64,
+    top_k=8,
+    token_budget=2048,
+)

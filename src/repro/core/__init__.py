@@ -1,0 +1,25 @@
+"""EraRAG core: the paper's contribution (LSH graph + incremental update)."""
+from repro.core.erarag import EraRAG
+from repro.core.graph import EraGraph, Node, Segment, UpdateReport
+from repro.core.lsh import HyperplaneLSH
+from repro.core.retrieve import Retrieval, adaptive_search, collapsed_search
+from repro.core.store import Hit, VectorStore
+from repro.core.summarize import ExtractiveSummarizer, LMSummarizer, \
+    SummaryResult
+
+__all__ = [
+    "EraRAG",
+    "EraGraph",
+    "Node",
+    "Segment",
+    "UpdateReport",
+    "HyperplaneLSH",
+    "Retrieval",
+    "adaptive_search",
+    "collapsed_search",
+    "Hit",
+    "VectorStore",
+    "ExtractiveSummarizer",
+    "LMSummarizer",
+    "SummaryResult",
+]

@@ -1,0 +1,345 @@
+"""Baseline retrieval systems the paper compares against (§IV).
+
+- ``VanillaRAG``   — flat dense retrieval (no hierarchy, no summaries);
+- ``BM25``         — sparse lexical retrieval (Robertson-Walker);
+- ``RaptorLike``   — recursive k-means + summarize, rebuilt from
+  scratch on every update (what RAPTOR must do: its GMM/k-means
+  clustering is not stable under growth, the gap EraRAG targets);
+- ``GraphRAGLike`` — entity co-occurrence graph + label-propagation
+  communities + per-community summaries, fully rebuilt per update
+  (mirrors GraphRAG's re-clustering cost profile).
+
+All share EraRAG's tokenizer/embedder/summarizer and the same token
+accounting so Figs 2/4/6 and Table II comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import EraRAGConfig
+from repro.core.graph import UpdateReport
+from repro.core.retrieve import Retrieval
+from repro.core.store import Hit
+from repro.core.summarize import ExtractiveSummarizer, Summarizer
+from repro.data.chunker import Chunk, chunk_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.kernels.mips_topk.ops import mips_topk
+
+
+class _Base:
+    """Shared doc bookkeeping + budgeted context assembly."""
+
+    def __init__(self, cfg: EraRAGConfig, embedder):
+        self.cfg = cfg
+        self.embedder = embedder
+        self.tokenizer = HashTokenizer()
+        self.docs: List[Tuple[str, str]] = []
+        self.reports: List[UpdateReport] = []
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.tokens_total for r in self.reports)
+
+    @property
+    def total_build_time(self) -> float:
+        return sum(r.time_total for r in self.reports)
+
+    def last_report(self) -> UpdateReport:
+        return self.reports[-1] if self.reports else UpdateReport()
+
+    def _budget(self, texts: Sequence[str], scores: Sequence[float],
+                ids: Sequence[str]) -> Retrieval:
+        picked: List[Hit] = []
+        out: List[str] = []
+        total = 0
+        for t, s, i in zip(texts, scores, ids):
+            n = self.tokenizer.count(t)
+            if picked and total + n > self.cfg.token_budget:
+                continue
+            picked.append(Hit(node_id=i, score=float(s), layer=0))
+            out.append(t)
+            total += n
+            if total >= self.cfg.token_budget:
+                break
+        return Retrieval(hits=picked, context="\n".join(out),
+                         n_tokens=total)
+
+
+class VanillaRAG(_Base):
+    def __init__(self, cfg: EraRAGConfig, embedder):
+        super().__init__(cfg, embedder)
+        self.chunks: List[Chunk] = []
+        self._embs: Optional[np.ndarray] = None
+
+    def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
+        docs = list(docs)
+        self.docs.extend(docs)
+        rep = UpdateReport()
+        t0 = time.perf_counter()
+        new = chunk_corpus(docs, self.tokenizer, self.cfg.chunk_tokens)
+        new = [c for c in new
+               if c.chunk_id not in {x.chunk_id for x in self.chunks}]
+        rep.n_new_chunks = len(new)
+        if new:
+            embs = self.embedder.encode([c.text for c in new])
+            self.chunks.extend(new)
+            self._embs = embs if self._embs is None else \
+                np.concatenate([self._embs, embs])
+        rep.time_embed = time.perf_counter() - t0
+        self.reports.append(rep)
+        return rep
+
+    def query(self, text: str, k: Optional[int] = None,
+              mode: str = "collapsed") -> Retrieval:
+        k = k or self.cfg.top_k
+        if not self.chunks:
+            return Retrieval([], "", 0)
+        q = self.embedder.encode([text])[0]
+        k_eff = min(k, len(self.chunks))
+        vals, idx = mips_topk(jnp.asarray(q[None]),
+                              jnp.asarray(self._embs), k_eff)
+        vals, idx = np.asarray(vals)[0], np.asarray(idx)[0]
+        return self._budget([self.chunks[int(i)].text for i in idx],
+                            vals.tolist(),
+                            [self.chunks[int(i)].chunk_id for i in idx])
+
+
+class BM25(_Base):
+    K1 = 1.5
+    B = 0.75
+
+    def __init__(self, cfg: EraRAGConfig, embedder=None):
+        super().__init__(cfg, embedder)
+        self.chunks: List[Chunk] = []
+        self.tf: List[Counter] = []
+        self.df: Counter = Counter()
+        self.lens: List[int] = []
+
+    def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
+        docs = list(docs)
+        self.docs.extend(docs)
+        rep = UpdateReport()
+        t0 = time.perf_counter()
+        new = chunk_corpus(docs, self.tokenizer, self.cfg.chunk_tokens)
+        seen = {c.chunk_id for c in self.chunks}
+        for c in new:
+            if c.chunk_id in seen:
+                continue
+            toks = [t.lower() for t in self.tokenizer.tokenize(c.text)]
+            tf = Counter(toks)
+            self.chunks.append(c)
+            self.tf.append(tf)
+            self.lens.append(len(toks))
+            for term in tf:
+                self.df[term] += 1
+        rep.n_new_chunks = len(new)
+        rep.time_partition = time.perf_counter() - t0  # index time
+        self.reports.append(rep)
+        return rep
+
+    def query(self, text: str, k: Optional[int] = None,
+              mode: str = "collapsed") -> Retrieval:
+        k = k or self.cfg.top_k
+        n = len(self.chunks)
+        if n == 0:
+            return Retrieval([], "", 0)
+        avg_len = sum(self.lens) / n
+        q_terms = [t.lower() for t in self.tokenizer.tokenize(text)]
+        scores = np.zeros(n, dtype=np.float64)
+        for term in q_terms:
+            df = self.df.get(term)
+            if not df:
+                continue
+            idf = math.log(1 + (n - df + 0.5) / (df + 0.5))
+            for i, tf in enumerate(self.tf):
+                f = tf.get(term, 0)
+                if f:
+                    denom = f + self.K1 * (1 - self.B +
+                                           self.B * self.lens[i] / avg_len)
+                    scores[i] += idf * f * (self.K1 + 1) / denom
+        order = np.argsort(-scores, kind="stable")[:k]
+        return self._budget([self.chunks[int(i)].text for i in order],
+                            scores[order].tolist(),
+                            [self.chunks[int(i)].chunk_id for i in order])
+
+
+def _kmeans(embs: np.ndarray, n_clusters: int, seed: int = 0,
+            iters: int = 10) -> np.ndarray:
+    rng = np.random.Generator(np.random.PCG64(seed))
+    n = embs.shape[0]
+    n_clusters = min(n_clusters, n)
+    centers = embs[rng.choice(n, size=n_clusters, replace=False)]
+    assign = np.zeros(n, dtype=np.int64)
+    for _ in range(iters):
+        sims = embs @ centers.T
+        assign = np.argmax(sims, axis=1)
+        for c in range(n_clusters):
+            m = assign == c
+            if m.any():
+                v = embs[m].mean(axis=0)
+                nv = np.linalg.norm(v)
+                centers[c] = v / (nv if nv > 0 else 1.0)
+    return assign
+
+
+class RaptorLike(_Base):
+    """Recursive k-means + summarization, rebuilt per update."""
+
+    def __init__(self, cfg: EraRAGConfig, embedder,
+                 summarizer: Optional[Summarizer] = None):
+        super().__init__(cfg, embedder)
+        self.summarizer = summarizer or ExtractiveSummarizer(
+            embedder, cfg.summary_max_tokens, self.tokenizer)
+        self.texts: List[str] = []
+        self.ids: List[str] = []
+        self._embs: Optional[np.ndarray] = None
+
+    def _rebuild(self, rep: UpdateReport) -> None:
+        chunks = chunk_corpus(self.docs, self.tokenizer,
+                              self.cfg.chunk_tokens)
+        texts = [c.text for c in chunks]
+        ids = [c.chunk_id for c in chunks]
+        t0 = time.perf_counter()
+        embs = self.embedder.encode(texts) if texts else \
+            np.zeros((0, self.cfg.embed_dim), np.float32)
+        rep.time_embed += time.perf_counter() - t0
+        level = 0
+        cur_texts, cur_embs = list(texts), embs
+        target = (self.cfg.s_min + self.cfg.s_max) / 2
+        while len(cur_texts) > self.cfg.s_max and \
+                level < self.cfg.max_layers:
+            t0 = time.perf_counter()
+            n_clusters = max(1, int(round(len(cur_texts) / target)))
+            assign = _kmeans(cur_embs, n_clusters, seed=level)
+            rep.time_partition += time.perf_counter() - t0
+            nxt_texts: List[str] = []
+            for c in range(assign.max() + 1):
+                members = [cur_texts[i] for i in
+                           np.nonzero(assign == c)[0]]
+                if not members:
+                    continue
+                t0 = time.perf_counter()
+                res = self.summarizer.summarize(members)
+                rep.time_summarize += time.perf_counter() - t0
+                rep.tokens_in += res.tokens_in
+                rep.tokens_out += res.tokens_out
+                rep.n_resummarized += 1
+                nxt_texts.append(res.text)
+            texts.extend(nxt_texts)
+            ids.extend(f"sum-{level}-{i}"
+                       for i in range(len(nxt_texts)))
+            t0 = time.perf_counter()
+            cur_embs = self.embedder.encode(nxt_texts) if nxt_texts \
+                else np.zeros((0, self.cfg.embed_dim), np.float32)
+            rep.time_embed += time.perf_counter() - t0
+            cur_texts = nxt_texts
+            level += 1
+        self.texts, self.ids = texts, ids
+        t0 = time.perf_counter()
+        self._embs = self.embedder.encode(texts) if texts else \
+            np.zeros((0, self.cfg.embed_dim), np.float32)
+        rep.time_embed += time.perf_counter() - t0
+
+    def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
+        self.docs.extend(list(docs))
+        rep = UpdateReport()
+        rep.n_new_chunks = len(self.docs)
+        self._rebuild(rep)   # full reconstruction every time
+        self.reports.append(rep)
+        return rep
+
+    def query(self, text: str, k: Optional[int] = None,
+              mode: str = "collapsed") -> Retrieval:
+        k = k or self.cfg.top_k
+        if not self.texts:
+            return Retrieval([], "", 0)
+        q = self.embedder.encode([text])[0]
+        k_eff = min(k, len(self.texts))
+        vals, idx = mips_topk(jnp.asarray(q[None]),
+                              jnp.asarray(self._embs), k_eff)
+        vals, idx = np.asarray(vals)[0], np.asarray(idx)[0]
+        return self._budget([self.texts[int(i)] for i in idx],
+                            vals.tolist(),
+                            [self.ids[int(i)] for i in idx])
+
+
+class GraphRAGLike(RaptorLike):
+    """Entity-graph + community summaries, fully rebuilt per update.
+
+    Heavier than RAPTOR: every chunk pair sharing an entity adds an
+    edge; label propagation finds communities; every community is
+    re-summarized on every rebuild -- reproducing GraphRAG's cost
+    profile (paper: 'performs full re-clustering after each update').
+    """
+
+    def _communities(self, chunks: List[Chunk]) -> List[List[int]]:
+        ent_chunks: Dict[str, List[int]] = defaultdict(list)
+        for i, c in enumerate(chunks):
+            for t in self.tokenizer.tokenize(c.text):
+                if t.startswith(("ent_", "val_", "topic_")):
+                    ent_chunks[t].append(i)
+        n = len(chunks)
+        labels = np.arange(n)
+        adj: Dict[int, set] = defaultdict(set)
+        for members in ent_chunks.values():
+            for a in members:
+                adj[a].update(m for m in members if m != a)
+        for _ in range(5):  # label propagation rounds
+            changed = False
+            for i in range(n):
+                if not adj[i]:
+                    continue
+                cnt = Counter(labels[j] for j in adj[i])
+                best = min(cnt, key=lambda l: (-cnt[l], l))
+                if labels[i] != best:
+                    labels[i] = best
+                    changed = True
+            if not changed:
+                break
+        comms: Dict[int, List[int]] = defaultdict(list)
+        for i, l in enumerate(labels):
+            comms[int(l)].append(i)
+        return list(comms.values())
+
+    def _rebuild(self, rep: UpdateReport) -> None:
+        chunks = chunk_corpus(self.docs, self.tokenizer,
+                              self.cfg.chunk_tokens)
+        texts = [c.text for c in chunks]
+        ids = [c.chunk_id for c in chunks]
+        # GraphRAG's indexing runs an entity/relation-extraction LLM
+        # call over EVERY chunk on every rebuild (its dominant cost,
+        # which the paper contrasts against: 'GraphRAG performs full
+        # re-clustering after each update').  tokens_in = chunk text,
+        # tokens_out ~ extracted triple list.
+        t0 = time.perf_counter()
+        for c in chunks:
+            rep.tokens_in += c.n_tokens
+            rep.tokens_out += max(8, c.n_tokens // 4)
+        rep.time_summarize += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        comms = self._communities(chunks)
+        rep.time_partition += time.perf_counter() - t0
+        for ci, members in enumerate(comms):
+            if len(members) < 2:
+                continue
+            t0 = time.perf_counter()
+            res = self.summarizer.summarize(
+                [texts[i] for i in members])
+            rep.time_summarize += time.perf_counter() - t0
+            rep.tokens_in += res.tokens_in
+            rep.tokens_out += res.tokens_out
+            rep.n_resummarized += 1
+            texts.append(res.text)
+            ids.append(f"comm-{ci}")
+        self.texts, self.ids = texts, ids
+        t0 = time.perf_counter()
+        self._embs = self.embedder.encode(texts) if texts else \
+            np.zeros((0, self.cfg.embed_dim), np.float32)
+        rep.time_embed += time.perf_counter() - t0

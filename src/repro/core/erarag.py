@@ -1,0 +1,80 @@
+"""EraRAG facade: the paper's full pipeline behind one object.
+
+``insert_docs`` chunks + embeds + updates the hierarchical graph
+(incremental after the first call); ``query`` runs collapsed or
+adaptive retrieval and returns the budgeted context.  All cost metrics
+(tokens, per-stage wall time) accumulate in ``self.reports`` — the
+benchmark harness reads them to reproduce the paper's figures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.common.config import EraRAGConfig
+from repro.core.graph import EraGraph, UpdateReport
+from repro.core.retrieve import Retrieval, adaptive_search, \
+    collapsed_search
+from repro.core.store import VectorStore
+from repro.core.summarize import Summarizer
+from repro.data.chunker import chunk_corpus
+from repro.data.tokenizer import HashTokenizer
+
+
+class EraRAG:
+    def __init__(self, cfg: EraRAGConfig, embedder,
+                 summarizer: Optional[Summarizer] = None):
+        self.cfg = cfg
+        self.embedder = embedder
+        self.tokenizer = HashTokenizer()
+        self.graph = EraGraph(cfg, embedder, summarizer, self.tokenizer)
+        self.store = VectorStore(self.graph)
+        self.reports: List[UpdateReport] = []
+
+    # ------------------------------------------------------------------
+    def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
+        chunks = chunk_corpus(docs, self.tokenizer,
+                              self.cfg.chunk_tokens)
+        report = self.graph.insert_chunks(chunks)
+        self.reports.append(report)
+        return report
+
+    def query(self, text: str, k: Optional[int] = None,
+              mode: str = "collapsed") -> Retrieval:
+        """mode: collapsed | detailed | summarized."""
+        k = k or self.cfg.top_k
+        q = self.embedder.encode([text])[0]
+        if mode == "collapsed":
+            return collapsed_search(self.graph, self.store, q, k,
+                                    self.cfg.token_budget,
+                                    self.tokenizer)
+        return adaptive_search(self.graph, self.store, q, k,
+                               self.cfg.token_budget,
+                               self.cfg.retrieval_bias_p, mode,
+                               self.tokenizer)
+
+    # ------------------------------------------------------------------
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.tokens_total for r in self.reports)
+
+    @property
+    def total_build_time(self) -> float:
+        return sum(r.time_total for r in self.reports)
+
+    def last_report(self) -> UpdateReport:
+        return self.reports[-1] if self.reports else UpdateReport()
+
+    def state_dict(self) -> dict:
+        return self.graph.state_dict()
+
+    @classmethod
+    def from_state(cls, state: dict, embedder,
+                   summarizer: Optional[Summarizer] = None) -> "EraRAG":
+        cfg = EraRAGConfig(**state["cfg"])
+        obj = cls(cfg, embedder, summarizer)
+        obj.graph = EraGraph.from_state(state, embedder, summarizer)
+        obj.store = VectorStore(obj.graph)
+        return obj

@@ -1,0 +1,471 @@
+"""Hierarchical EraRAG graph: build (Alg 1) + selective update (Alg 3).
+
+One code path serves both: the static build is an insert into an empty
+graph (Alg 1 is the degenerate case of Alg 3 — the paper presents them
+separately but the update rules subsume construction).  Per-layer
+update: route new nodes to segments by code key, repartition only the
+affected contiguous regions, re-summarize only changed segments, and
+propagate (added, removed) parent sets upward.  Node ids are content
+addresses (hash of layer, children, text) so an update that regenerates
+an identical summary converges instead of cascading.
+
+Locality guarantee (tested): segments outside the affected regions keep
+their identity, parent, and summary — the structural basis for the
+paper's order-of-magnitude update savings.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.common.config import EraRAGConfig
+from repro.core.lsh import HyperplaneLSH
+from repro.core.partition import partition_items, sort_items
+from repro.core.summarize import ExtractiveSummarizer, Summarizer
+from repro.data.chunker import Chunk
+from repro.data.tokenizer import HashTokenizer
+
+
+@dataclass
+class Node:
+    node_id: str
+    layer: int
+    text: str
+    embedding: np.ndarray           # (d,) unit float32
+    key: int                        # packed LSH code as int
+    children: Tuple[str, ...] = ()
+    doc_id: str = ""
+    n_tokens: int = 0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.layer == 0
+
+
+@dataclass
+class Segment:
+    members: Tuple[str, ...]        # node ids, (key, id)-sorted
+    min_key: int = 0                # code key of first member (routing)
+    parent: str = ""                # summary node id at layer+1
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+
+@dataclass
+class UpdateReport:
+    n_new_chunks: int = 0
+    n_resummarized: int = 0
+    n_affected_segments: int = 0
+    n_new_layers: int = 0
+    tokens_in: int = 0
+    tokens_out: int = 0
+    time_embed: float = 0.0
+    time_hash: float = 0.0
+    time_partition: float = 0.0
+    time_summarize: float = 0.0
+
+    @property
+    def tokens_total(self) -> int:
+        return self.tokens_in + self.tokens_out
+
+    @property
+    def time_total(self) -> float:
+        return (self.time_embed + self.time_hash + self.time_partition
+                + self.time_summarize)
+
+    def merge(self, other: "UpdateReport") -> "UpdateReport":
+        for f in self.__dataclass_fields__:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
+
+def _node_id(layer: int, children: Sequence[str], text: str) -> str:
+    h = hashlib.blake2b(digest_size=12)
+    h.update(str(layer).encode())
+    for c in children:
+        h.update(c.encode())
+    h.update(b"\x00")
+    h.update(text.encode("utf-8"))
+    return f"L{layer}-{h.hexdigest()}"
+
+
+class EraGraph:
+    def __init__(self, cfg: EraRAGConfig, embedder,
+                 summarizer: Optional[Summarizer] = None,
+                 tokenizer: Optional[HashTokenizer] = None):
+        self.cfg = cfg
+        self.embedder = embedder
+        self.tokenizer = tokenizer or HashTokenizer()
+        self.summarizer = summarizer or ExtractiveSummarizer(
+            embedder, cfg.summary_max_tokens, self.tokenizer)
+        self.lsh = HyperplaneLSH(cfg.embed_dim, cfg.n_hyperplanes,
+                                 cfg.seed)
+        self.nodes: Dict[str, Node] = {}
+        # layer_order[l]: insertion-ordered node-id set for layer l
+        self.layer_order: List[Dict[str, None]] = []
+        # segments[l] partitions layer l (sorted by first-member key)
+        self.segments: List[List[Segment]] = []
+        self.member_seg: List[Dict[str, Segment]] = []
+        self.version = 0
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_order)
+
+    def layer_ids(self, layer: int) -> List[str]:
+        return list(self.layer_order[layer]) if layer < self.n_layers \
+            else []
+
+    def insert_chunks(self, chunks: Sequence[Chunk]) -> UpdateReport:
+        """Insert leaf chunks; build or incrementally update the graph."""
+        report = UpdateReport()
+        fresh = [c for c in chunks if c.chunk_id not in self.nodes]
+        report.n_new_chunks = len(fresh)
+        if not fresh:
+            return report
+
+        t0 = time.perf_counter()
+        embs = self.embedder.encode([c.text for c in fresh])
+        report.time_embed += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        keys = self.lsh.hash_ints(embs)
+        report.time_hash += time.perf_counter() - t0
+
+        added: List[str] = []
+        for c, e, k in zip(fresh, embs, keys):
+            node = Node(node_id=c.chunk_id, layer=0, text=c.text,
+                        embedding=np.asarray(e, dtype=np.float32),
+                        key=int(k), doc_id=c.doc_id,
+                        n_tokens=c.n_tokens)
+            self.nodes[node.node_id] = node
+            added.append(node.node_id)
+
+        removed: List[str] = []
+        layer = 0
+        while added or removed:
+            added, removed, rep = self._update_layer(layer, added,
+                                                     removed)
+            report.merge(rep)
+            layer += 1
+        self.version += 1
+        return report
+
+    # ------------------------------------------------------------------
+    # layer update machinery
+    # ------------------------------------------------------------------
+    def _ensure_layer(self, layer: int) -> None:
+        while len(self.layer_order) <= layer:
+            self.layer_order.append({})
+        while len(self.segments) <= layer:
+            self.segments.append([])
+            self.member_seg.append({})
+
+    def _summarize_segment(self, layer: int, members: Tuple[str, ...],
+                           report: UpdateReport) -> str:
+        """Create (or reuse) the parent summary node for ``members``."""
+        texts = [self.nodes[m].text for m in members]
+        t0 = time.perf_counter()
+        res = self.summarizer.summarize(texts)
+        report.time_summarize += time.perf_counter() - t0
+        report.tokens_in += res.tokens_in
+        report.tokens_out += res.tokens_out
+        report.n_resummarized += 1
+
+        t0 = time.perf_counter()
+        emb = self.embedder.encode([res.text])[0].astype(np.float32)
+        report.time_embed += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        key = int(self.lsh.hash_ints(emb[None, :])[0])
+        report.time_hash += time.perf_counter() - t0
+
+        nid = _node_id(layer + 1, members, res.text)
+        self.nodes[nid] = Node(node_id=nid, layer=layer + 1,
+                               text=res.text, embedding=emb, key=key,
+                               children=tuple(members),
+                               n_tokens=res.tokens_out)
+        return nid
+
+    def _route(self, layer: int, key: int) -> int:
+        """Index of the segment owning code ``key`` (rightmost whose
+        first-member key <= key; else 0)."""
+        segs = self.segments[layer]
+        lo, hi = 0, len(segs) - 1
+        ans = 0
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            if segs[mid].min_key <= key:
+                ans = mid
+                lo = mid + 1
+            else:
+                hi = mid - 1
+        return ans
+
+    def _update_layer(self, layer: int, added: List[str],
+                      removed: List[str]
+                      ) -> Tuple[List[str], List[str], UpdateReport]:
+        report = UpdateReport()
+        self._ensure_layer(layer)
+        order = self.layer_order[layer]
+        for nid in added:
+            order[nid] = None
+        for nid in removed:
+            order.pop(nid, None)
+
+        segs = self.segments[layer]
+        if not segs:
+            return self._maybe_create_layer_above(layer, report)
+
+        # --- route additions / removals to segments ------------------
+        affected: Set[int] = set()
+        updated: Dict[int, List[str]] = {}
+
+        def members_of(idx: int) -> List[str]:
+            if idx not in updated:
+                updated[idx] = list(segs[idx].members)
+            return updated[idx]
+
+        for nid in added:
+            idx = self._route(layer, self.nodes[nid].key)
+            members_of(idx).append(nid)
+            affected.add(idx)
+        for nid in removed:
+            seg = self.member_seg[layer].pop(nid, None)
+            if seg is None:
+                continue
+            idx = segs.index(seg)  # small layer counts; OK
+            m = members_of(idx)
+            if nid in m:
+                m.remove(nid)
+            affected.add(idx)
+        if not affected:
+            return [], [], report
+
+        # --- repartition affected regions -----------------------------
+        # Locality: each affected segment is its own region when its
+        # updated size stays within [s_min, s_max] (one re-summary);
+        # only bound-violating segments pull in neighbors (the paper's
+        # merge-with-adjacent rule).  Joint re-splitting of merely-
+        # adjacent affected segments would shift their boundaries and
+        # re-summarize segments that didn't need it.
+        t0 = time.perf_counter()
+        regions: List[Tuple[int, int]] = []
+        for idx in sorted(affected):
+            size = len(updated[idx]) if idx in updated \
+                else len(segs[idx].members)
+            lo = hi = idx
+            if size < self.cfg.s_min:
+                lo, hi = self._extend_group(layer, idx, idx, updated)
+            regions.append((lo, hi))
+        groups = self._merge_intervals(regions)
+        added_parents: List[str] = []
+        removed_parents: List[str] = []
+        # process right-to-left so list splices keep earlier indices
+        for lo, hi in reversed(groups):
+            items = []
+            for idx in range(lo, hi + 1):
+                cur = updated[idx] if idx in updated \
+                    else segs[idx].members
+                for nid in cur:
+                    items.append((self.nodes[nid].key, nid))
+            parts = partition_items(items, self.cfg.s_min,
+                                    self.cfg.s_max)
+            report.n_affected_segments += hi - lo + 1
+
+            old_by_members = {segs[i].members: segs[i]
+                              for i in range(lo, hi + 1)}
+            old_parents = {segs[i].parent for i in range(lo, hi + 1)
+                           if segs[i].parent}
+            new_segs: List[Segment] = []
+            new_parents: Set[str] = set()
+            report.time_partition += time.perf_counter() - t0
+            for part in parts:
+                members = tuple(nid for _, nid in part)
+                reuse = old_by_members.get(members)
+                if reuse is not None:
+                    new_segs.append(reuse)
+                    if reuse.parent:
+                        new_parents.add(reuse.parent)
+                    continue
+                parent = self._summarize_segment(layer, members, report)
+                new_segs.append(Segment(
+                    members=members, min_key=part[0][0], parent=parent))
+                new_parents.add(parent)
+            t0 = time.perf_counter()
+
+            segs[lo:hi + 1] = new_segs
+            for seg in new_segs:
+                for nid in seg.members:
+                    self.member_seg[layer][nid] = seg
+            added_parents.extend(sorted(new_parents - old_parents))
+            removed_parents.extend(sorted(old_parents - new_parents))
+        report.time_partition += time.perf_counter() - t0
+
+        # drop removed parent nodes from the graph (paper: delete the
+        # original node; children were adopted by the new summary node)
+        for nid in removed_parents:
+            self.nodes.pop(nid, None)
+        return added_parents, removed_parents, report
+
+    def _merge_intervals(self, regions: List[Tuple[int, int]]
+                         ) -> List[Tuple[int, int]]:
+        """Merge overlapping/touching [lo, hi] index intervals."""
+        out: List[Tuple[int, int]] = []
+        for lo, hi in sorted(regions):
+            if out and lo <= out[-1][1]:
+                out[-1] = (out[-1][0], max(out[-1][1], hi))
+            else:
+                out.append((lo, hi))
+        return out
+
+    def _extend_group(self, layer: int, lo: int, hi: int,
+                      updated: Dict[int, List[str]]
+                      ) -> Tuple[int, int]:
+        """Grow an undersized region so the merge step has neighbors."""
+        segs = self.segments[layer]
+
+        def total(a: int, b: int) -> int:
+            return sum(len(updated[i]) if i in updated
+                       else len(segs[i].members)
+                       for i in range(a, b + 1))
+
+        while total(lo, hi) < self.cfg.s_min and (lo > 0 or
+                                                  hi < len(segs) - 1):
+            if lo > 0:
+                lo -= 1
+            else:
+                hi += 1
+        return lo, hi
+
+    def _maybe_create_layer_above(self, layer: int, report: UpdateReport
+                                  ) -> Tuple[List[str], List[str],
+                                             UpdateReport]:
+        """Top-layer rule (Alg 3 L14): partition + summarize the whole
+        layer once it outgrows s_max, creating the next layer."""
+        ids = list(self.layer_order[layer])
+        stop = (len(ids) <= self.cfg.s_max
+                or layer >= self.cfg.max_layers)
+        if stop:
+            return [], [], report
+        t0 = time.perf_counter()
+        items = [(self.nodes[n].key, n) for n in ids]
+        parts = partition_items(items, self.cfg.s_min, self.cfg.s_max)
+        report.time_partition += time.perf_counter() - t0
+        report.n_new_layers += 1
+        new_segs: List[Segment] = []
+        parents: List[str] = []
+        for part in parts:
+            members = tuple(nid for _, nid in part)
+            parent = self._summarize_segment(layer, members, report)
+            new_segs.append(Segment(
+                members=members, min_key=part[0][0], parent=parent))
+            parents.append(parent)
+        self.segments[layer] = new_segs
+        for seg in new_segs:
+            for nid in seg.members:
+                self.member_seg[layer][nid] = seg
+        return parents, [], report
+
+    # ------------------------------------------------------------------
+    # integrity + persistence
+    # ------------------------------------------------------------------
+    def check_integrity(self) -> List[str]:
+        """Structural invariants; returns list of violations (tests)."""
+        errs: List[str] = []
+        for layer, segs in enumerate(self.segments):
+            if not segs:
+                continue
+            seen: Set[str] = set()
+            for seg in segs:
+                if seg.size > self.cfg.s_max:
+                    errs.append(f"L{layer}: segment > s_max "
+                                f"({seg.size})")
+                for nid in seg.members:
+                    if nid in seen:
+                        errs.append(f"L{layer}: duplicate member {nid}")
+                    seen.add(nid)
+                    if nid not in self.nodes:
+                        errs.append(f"L{layer}: dangling member {nid}")
+                p = seg.parent
+                if p and p not in self.nodes:
+                    errs.append(f"L{layer}: dangling parent {p}")
+                if p and tuple(self.nodes[p].children) != seg.members:
+                    errs.append(f"L{layer}: parent children mismatch")
+            layer_ids = set(self.layer_order[layer])
+            if seen != layer_ids:
+                errs.append(
+                    f"L{layer}: partition covers {len(seen)} of "
+                    f"{len(layer_ids)} nodes")
+        for nid, node in self.nodes.items():
+            if node.layer >= self.n_layers or \
+                    nid not in self.layer_order[node.layer]:
+                errs.append(f"node {nid} missing from layer order")
+        return errs
+
+    def all_embeddings(self) -> Tuple[List[str], np.ndarray, np.ndarray]:
+        """(ids, (n, d) embeddings, (n,) layers) for the vector store."""
+        ids = list(self.nodes)
+        if not ids:
+            return [], np.zeros((0, self.cfg.embed_dim), np.float32), \
+                np.zeros((0,), np.int32)
+        embs = np.stack([self.nodes[i].embedding for i in ids])
+        layers = np.asarray([self.nodes[i].layer for i in ids],
+                            dtype=np.int32)
+        return ids, embs, layers
+
+    def state_dict(self) -> dict:
+        return {
+            "cfg": self.cfg.__dict__,
+            "lsh": self.lsh.state_dict(),
+            "version": self.version,
+            "nodes": [
+                {"node_id": n.node_id, "layer": n.layer, "text": n.text,
+                 "embedding": n.embedding, "key": str(n.key),
+                 "children": list(n.children), "doc_id": n.doc_id,
+                 "n_tokens": n.n_tokens}
+                for n in self.nodes.values()],
+            "layer_order": [list(d) for d in self.layer_order],
+            "segments": [
+                [{"members": list(s.members), "parent": s.parent}
+                 for s in segs]
+                for segs in self.segments],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, embedder,
+                   summarizer: Optional[Summarizer] = None) -> "EraGraph":
+        cfg = EraRAGConfig(**state["cfg"])
+        g = cls(cfg, embedder, summarizer)
+        g.lsh = HyperplaneLSH.from_state(state["lsh"])
+        g.version = int(state["version"])
+        for nd in state["nodes"]:
+            node = Node(node_id=nd["node_id"], layer=int(nd["layer"]),
+                        text=nd["text"],
+                        embedding=np.asarray(nd["embedding"],
+                                             dtype=np.float32),
+                        key=int(nd["key"]),
+                        children=tuple(nd["children"]),
+                        doc_id=nd["doc_id"],
+                        n_tokens=int(nd["n_tokens"]))
+            g.nodes[node.node_id] = node
+        g.layer_order = [dict.fromkeys(ids)
+                         for ids in state["layer_order"]]
+        g.segments = []
+        g.member_seg = []
+        for segs in state["segments"]:
+            lst = [Segment(members=tuple(s["members"]),
+                           min_key=g.nodes[s["members"][0]].key,
+                           parent=s["parent"]) for s in segs]
+            g.segments.append(lst)
+            g.member_seg.append({nid: seg for seg in lst
+                                 for nid in seg.members})
+        return g

@@ -1,0 +1,72 @@
+"""Query processing (paper Alg 2) + adaptive detailed/summarized search.
+
+Collapsed search treats every node — leaf chunks and summaries — as one
+flat retrieval space; adaptive search splits the budget ``k`` into a
+``p`` fraction taken from the preferred granularity and the remainder
+from the other (paper §III.D).  Both enforce the token budget ``T`` by
+greedy truncation of the score-ordered candidates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.core.store import Hit, VectorStore
+from repro.data.tokenizer import HashTokenizer
+
+
+@dataclass
+class Retrieval:
+    hits: List[Hit]
+    context: str
+    n_tokens: int
+
+
+def _budgeted(graph, hits: Sequence[Hit], budget: int,
+              tokenizer: HashTokenizer) -> Retrieval:
+    picked: List[Hit] = []
+    texts: List[str] = []
+    total = 0
+    for h in hits:
+        node = graph.nodes[h.node_id]
+        n = node.n_tokens or tokenizer.count(node.text)
+        if picked and total + n > budget:
+            continue
+        picked.append(h)
+        texts.append(node.text)
+        total += n
+        if total >= budget:
+            break
+    return Retrieval(hits=picked, context="\n".join(texts),
+                     n_tokens=total)
+
+
+def collapsed_search(graph, store: VectorStore, query_emb, k: int,
+                     token_budget: int,
+                     tokenizer: Optional[HashTokenizer] = None
+                     ) -> Retrieval:
+    tok = tokenizer or HashTokenizer()
+    hits = store.search(query_emb, k)
+    return _budgeted(graph, hits, token_budget, tok)
+
+
+def adaptive_search(graph, store: VectorStore, query_emb, k: int,
+                    token_budget: int, p: float,
+                    mode: str = "detailed",
+                    tokenizer: Optional[HashTokenizer] = None
+                    ) -> Retrieval:
+    """mode='detailed': top-pk from leaves + top-(k-pk) from summaries;
+    mode='summarized': the reverse (paper §III.D)."""
+    if mode not in ("detailed", "summarized"):
+        raise ValueError(mode)
+    tok = tokenizer or HashTokenizer()
+    k_primary = max(0, min(k, int(round(p * k))))
+    k_rest = k - k_primary
+    primary = "leaf" if mode == "detailed" else "summary"
+    secondary = "summary" if mode == "detailed" else "leaf"
+    hits = store.search(query_emb, k_primary, layer_filter=primary) \
+        if k_primary else []
+    hits += store.search(query_emb, k_rest, layer_filter=secondary) \
+        if k_rest else []
+    hits.sort(key=lambda h: -h.score)
+    return _budgeted(graph, hits, token_budget, tok)

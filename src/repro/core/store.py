@@ -1,0 +1,74 @@
+"""Flat vector store over all graph nodes (collapsed index, §III.D).
+
+Mirrors the FAISS IndexFlat role in the paper, implemented on the
+``mips_topk`` kernel.  The store tracks the graph version and rebuilds
+its matrix lazily after updates; production sharding splits the row set
+over the ``data`` mesh axis with a per-shard kernel scan + tiny top-k
+merge collective (see kernels/mips_topk/ops.merge_sharded_topk and
+launch/dryrun.py's retrieval cell).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mips_topk.ops import mips_topk
+
+
+@dataclass
+class Hit:
+    node_id: str
+    score: float
+    layer: int
+
+
+class VectorStore:
+    def __init__(self, graph):
+        self._graph = graph
+        self._version = -1
+        self._ids: List[str] = []
+        self._embs: Optional[np.ndarray] = None
+        self._layers: Optional[np.ndarray] = None
+
+    def _refresh(self) -> None:
+        if self._version == self._graph.version:
+            return
+        self._ids, self._embs, self._layers = \
+            self._graph.all_embeddings()
+        self._version = self._graph.version
+
+    @property
+    def size(self) -> int:
+        self._refresh()
+        return len(self._ids)
+
+    def search(self, query: np.ndarray, k: int,
+               layer_filter: Optional[str] = None) -> List[Hit]:
+        """layer_filter: None (all) | 'leaf' | 'summary'."""
+        self._refresh()
+        if not self._ids:
+            return []
+        embs, ids, layers = self._embs, self._ids, self._layers
+        if layer_filter == "leaf":
+            sel = np.nonzero(layers == 0)[0]
+        elif layer_filter == "summary":
+            sel = np.nonzero(layers > 0)[0]
+        else:
+            sel = None
+        if sel is not None:
+            if sel.size == 0:
+                return []
+            embs = embs[sel]
+        k_eff = min(k, embs.shape[0])
+        vals, idx = mips_topk(jnp.asarray(query[None, :]),
+                              jnp.asarray(embs), k_eff)
+        vals = np.asarray(vals)[0]
+        idx = np.asarray(idx)[0]
+        if sel is not None:
+            idx = sel[idx]
+        return [Hit(node_id=ids[int(i)], score=float(v),
+                    layer=int(layers[int(i)]))
+                for v, i in zip(vals, idx)]

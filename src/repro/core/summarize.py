@@ -1,0 +1,96 @@
+"""Segment summarizers (paper Alg 1 L12-13; the dominant cost, Fig 8).
+
+Two implementations behind one protocol:
+
+- ``ExtractiveSummarizer`` — deterministic centroid-nearest-sentence
+  selection.  Zero model weights, so every benchmark/test is exactly
+  reproducible offline; token accounting (tokens_in = segment text,
+  tokens_out = summary) matches how the paper counts LLM cost.
+- ``LMSummarizer`` — wraps the serving engine (a decoder LM from the
+  assigned archs) for the full-system path; used by examples and the
+  TPU serving benchmarks, where summarization is the prefill-heavy
+  workload the roofline §Perf LM hillclimb optimizes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import HashTokenizer
+
+_SENT_RE = re.compile(r"(?<=[.!?])\s+")
+
+
+@dataclass
+class SummaryResult:
+    text: str
+    tokens_in: int
+    tokens_out: int
+
+
+class Summarizer(Protocol):
+    def summarize(self, texts: Sequence[str]) -> SummaryResult: ...
+
+
+@dataclass
+class ExtractiveSummarizer:
+    """Pick sentences nearest the segment centroid until the budget."""
+
+    embedder: object                      # .encode(list[str]) -> (n, d)
+    max_tokens: int = 96
+    tokenizer: HashTokenizer = field(default_factory=HashTokenizer)
+
+    def summarize(self, texts: Sequence[str]) -> SummaryResult:
+        tokens_in = sum(self.tokenizer.count(t) for t in texts)
+        sents: List[str] = []
+        for t in texts:
+            sents.extend(s for s in _SENT_RE.split(t.strip()) if s)
+        # dedup, preserve order
+        seen = set()
+        uniq = []
+        for s in sents:
+            if s not in seen:
+                seen.add(s)
+                uniq.append(s)
+        if not uniq:
+            return SummaryResult("", tokens_in, 0)
+        embs = self.embedder.encode(uniq)
+        centroid = embs.mean(axis=0)
+        nc = np.linalg.norm(centroid)
+        centroid = centroid / (nc if nc > 0 else 1.0)
+        scores = embs @ centroid
+        order = np.argsort(-scores, kind="stable")
+        picked: List[int] = []
+        total = 0
+        for i in order:
+            n = self.tokenizer.count(uniq[int(i)])
+            if picked and total + n > self.max_tokens:
+                continue
+            picked.append(int(i))
+            total += n
+            if total >= self.max_tokens:
+                break
+        picked.sort()  # restore narrative order
+        summary = " ".join(uniq[i] for i in picked)
+        return SummaryResult(summary, tokens_in,
+                             self.tokenizer.count(summary))
+
+
+@dataclass
+class LMSummarizer:
+    """Abstractive summarization through the serving engine."""
+
+    engine: object                        # serving.Engine
+    max_tokens: int = 96
+    tokenizer: HashTokenizer = field(default_factory=HashTokenizer)
+    prompt_prefix: str = ("Summarize the following passages into one "
+                          "coherent paragraph:\n")
+
+    def summarize(self, texts: Sequence[str]) -> SummaryResult:
+        prompt = self.prompt_prefix + "\n".join(texts)
+        tokens_in = self.tokenizer.count(prompt)
+        out = self.engine.generate(prompt, max_new_tokens=self.max_tokens)
+        return SummaryResult(out, tokens_in, self.tokenizer.count(out))

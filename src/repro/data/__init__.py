@@ -1,0 +1,15 @@
+"""Data substrate: tokenizer, chunker, synthetic corpora, batch pipeline."""
+from repro.data.tokenizer import HashTokenizer
+from repro.data.chunker import chunk_text, chunk_corpus
+from repro.data.corpus import SyntheticCorpus, QAItem
+from repro.data.pipeline import TokenBatcher, synthetic_lm_batches
+
+__all__ = [
+    "HashTokenizer",
+    "chunk_text",
+    "chunk_corpus",
+    "SyntheticCorpus",
+    "QAItem",
+    "TokenBatcher",
+    "synthetic_lm_batches",
+]

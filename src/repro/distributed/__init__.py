@@ -1,0 +1,5 @@
+"""Distribution helpers: HLO analysis, sharding audit."""
+from repro.distributed.hlo_analysis import collective_bytes, \
+    collective_breakdown, roofline_terms
+
+__all__ = ["collective_bytes", "collective_breakdown", "roofline_terms"]

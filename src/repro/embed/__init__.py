@@ -1,0 +1,4 @@
+"""Embedding substrate: deterministic hashing embedder + transformer encoder."""
+from repro.embed.hashing import HashingEmbedder
+
+__all__ = ["HashingEmbedder"]

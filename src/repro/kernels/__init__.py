@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage ships three files:
+
+- ``kernel.py`` -- the ``pl.pallas_call`` + ``BlockSpec`` TPU kernel,
+- ``ops.py``    -- the jit'd public wrapper (pallas-on-TPU, jnp-on-CPU),
+- ``ref.py``    -- the pure-jnp oracle used by tests and CPU fallback.
+
+Kernels: ``lsh_hash`` (tiled GEMM + sign + bit-pack), ``mips_topk``
+(blocked MIPS with online top-k), ``hamming_topk`` (packed-code XOR +
+popcount search), ``flash_attention`` (online-softmax attention incl.
+decode), each validated against its oracle in interpret mode.
+"""

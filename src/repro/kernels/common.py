@@ -1,0 +1,42 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+
+@functools.lru_cache(None)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: True off-TPU (CPU correctness runs)."""
+    return not on_tpu()
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pick_block(dim: int, preferred: int, align: int = 8) -> int:
+    """Largest block <= preferred that divides dim (after align rounding).
+
+    Dry-run shapes are always 128-aligned; tests use small odd shapes,
+    where we fall back to the whole (padded) dim.
+    """
+    if dim % preferred == 0:
+        return preferred
+    for b in range(min(preferred, dim), 0, -1):
+        if dim % b == 0 and b % align == 0:
+            return b
+    return dim
+
+
+POW2_32 = np.asarray([1 << i for i in range(32)], dtype=np.uint32)

@@ -1,0 +1,162 @@
+"""Public attention op: pallas on TPU, chunked-jnp flash elsewhere.
+
+``chunked_attention`` is the GSPMD-lowerable pure-JAX flash variant the
+models use for dry-runs: a lax.scan over KV blocks with online-softmax
+state, so the (lq, lk) score matrix never materializes regardless of
+backend.  Its per-block memory profile matches the Pallas kernel, which
+replaces it 1:1 on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, on_tpu
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+_NEG = -1.0e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale",
+                                             "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = False,
+                    scale: float | None = None,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None):
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale,
+            interpret=interpret_default() if interpret is None else interpret)
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def dense_decode_attention(q, k, v, *, scale: float | None = None,
+                           kv_len: jnp.ndarray | None = None
+                           ) -> jnp.ndarray:
+    """Single-token decode attention as plain einsums (no scan).
+
+    q: (b, hq, 1, d); k, v: (b, hkv, lk, d).  Grouped einsum avoids the
+    GQA repeat; scores for one query are (b, h, lk) — tiny relative to
+    the cache — and the dense formulation lets GSPMD shard ``lk`` over
+    mesh axes with two small all-reduces (flash-decoding split-K
+    analogue) instead of a sequential scan over a sharded axis.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert lq == 1 and hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32))
+    if kv_len is not None:
+        valid = jnp.arange(lk)[None, :] < kv_len[:, None]    # (b, lk)
+        s = jnp.where(valid[:, None, None], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p / l, v.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def causal_blocked_attention(q, k, v, *, scale: float | None = None,
+                             q_chunk: int = 4096,
+                             block_k: int = 1024) -> jnp.ndarray:
+    """Causal attention with *triangular block skipping* (§Perf HC1.2).
+
+    The flat chunked scan computes every (q, k) block then masks —
+    for causal self-attention that wastes ~2x flops and score-tensor
+    traffic above the diagonal.  Here q is split into static chunks and
+    chunk i only attends k[: (i+1)*q_chunk] (the queries-at-end
+    convention of ``chunked_attention`` gives the intra-chunk causal
+    mask), so compute and score traffic follow the n(n+1)/2 triangle.
+    """
+    b, hq, lq, d = q.shape
+    lk = k.shape[2]
+    assert lq == lk, "block-causal path expects self-attention"
+    qc = min(q_chunk, lq)
+    if lq % qc:
+        return chunked_attention(q, k, v, causal=True, scale=scale,
+                                 block_k=block_k)
+    outs = []
+    for i in range(lq // qc):
+        end = (i + 1) * qc
+        outs.append(chunked_attention(
+            q[:, :, i * qc:end], k[:, :, :end], v[:, :, :end],
+            causal=True, scale=scale, block_k=min(block_k, end)))
+    return jnp.concatenate(outs, axis=2)
+
+
+def chunked_attention(q, k, v, *, causal: bool = False,
+                      scale: float | None = None,
+                      block_k: int = 1024,
+                      kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Online-softmax attention via lax.scan over KV blocks (pure JAX).
+
+    q: (b, hq, lq, d); k, v: (b, hkv, lk, d).  GQA via head grouping
+    (einsum over grouped heads, no repeat materialization).  ``kv_len``
+    optionally masks a partially-filled decode cache.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    bk = min(block_k, lk)
+    pad = (-lk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_blocks = (lk + pad) // bk
+
+    # §Perf HC1: keep matmul OPERANDS in the input dtype (bf16 on the
+    # serving path) and accumulate in fp32 via preferred_element_type —
+    # upcasting q/k/v (and the probability tile) to fp32 doubled the
+    # HBM traffic of the two dominant einsums.  Softmax statistics
+    # (m, l, alpha) stay fp32.
+    cdt = q.dtype
+    qg = (q * jnp.asarray(scale, cdt)).reshape(b, hkv, group, lq, d)
+    kb = jnp.moveaxis(k.reshape(b, hkv, n_blocks, bk, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, n_blocks, bk, d), 2, 0)
+
+    q_off = lk - lq
+    qpos = jnp.arange(lq) + q_off
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kt, vt, i = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kt.astype(cdt),
+                       preferred_element_type=jnp.float32)
+        kpos = i * bk + jnp.arange(bk)
+        mask = jnp.broadcast_to((kpos < lk)[None, None, :], (b, lq, bk))
+        if causal:
+            mask = mask & (kpos[None, None, :] <= qpos[None, :, None])
+        if kv_len is not None:
+            mask = mask & (kpos[None, None, :] < kv_len[:, None, None])
+        s = jnp.where(mask[:, None, None], s, _NEG)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(cdt), vt.astype(cdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    import os
+    unroll = True if os.environ.get("REPRO_UNROLL_SCANS") else 1
+    m0 = jnp.full((b, hkv, group, lq), _NEG, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, lq), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, hkv, group, lq, d), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kb, vb, jnp.arange(n_blocks)), unroll=unroll)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, hq, lq, d)
+    return out.astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for (GQA, optionally causal) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = False, scale: float | None = None,
+                  kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q: (b, hq, lq, d); k, v: (b, hkv, lk, d) with hq % hkv == 0.
+
+    ``kv_len``: optional (b,) valid KV lengths (decode with a partially
+    filled cache); positions >= kv_len are masked out.
+    Returns (b, hq, lq, d) in q's dtype; math in fp32.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    neg = jnp.float32(-1e30)
+    if causal:
+        # decode convention: q block sits at the *end* of the kv window
+        qpos = jnp.arange(lq)[:, None] + (lk - lq)
+        kpos = jnp.arange(lk)[None, :]
+        scores = jnp.where((kpos <= qpos)[None, None], scores, neg)
+    if kv_len is not None:
+        valid = jnp.arange(lk)[None, :] < kv_len[:, None]   # (b, lk)
+        scores = jnp.where(valid[:, None, None, :], scores, neg)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.hamming_topk.ops import hamming_topk
+
+__all__ = ["hamming_topk"]

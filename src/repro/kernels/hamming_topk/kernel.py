@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: packed-code Hamming top-k search.
+
+Bucket-adjacency queries for the EraRAG merge step and LSH candidate
+pruning run over *packed* codes (uint32 words from ``lsh_hash``), so the
+whole scan is memory-bound at 32x fewer HBM bytes than an fp32 re-score.
+XOR + population_count on the VPU; the same online top-k merge as
+``mips_topk`` keeps only (bq, k) state in VMEM.
+
+Grid: (b_tiles, n_tiles); codes are narrow (w <= 8 words) so no inner
+reduction dimension is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+from repro.kernels.mips_topk.kernel import _NEG, _merge_topk
+
+
+def _hamming_kernel(qc_ref, dbc_ref, out_d_ref, out_i_ref,
+                    vals_ref, idx_ref, *, k: int, bn: int, n: int,
+                    n_n: int, w: int):
+    i_n = pl.program_id(1)
+
+    @pl.when(i_n == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, _NEG)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    qc = qc_ref[...]                                # (bq, w) uint32
+    dbc = dbc_ref[...]                              # (bn, w) uint32
+    x = jnp.bitwise_xor(qc[:, None, :], dbc[None, :, :])
+    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32),
+                   axis=-1)                         # (bq, bn)
+
+    base = i_n * bn
+    tile_idx = base + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)[:, 0]
+    scores = jnp.where((tile_idx < n)[None, :], -dist.astype(jnp.float32),
+                       _NEG)
+    nv, ni = _merge_topk(vals_ref[...], idx_ref[...], scores, tile_idx, k)
+    vals_ref[...] = nv
+    idx_ref[...] = ni
+
+    @pl.when(i_n == n_n - 1)
+    def _write():
+        out_d_ref[...] = (-vals_ref[...]).astype(jnp.int32)
+        out_i_ref[...] = idx_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "interpret"))
+def hamming_topk_pallas(qc: jnp.ndarray, dbc: jnp.ndarray, k: int, *,
+                        block_q: int = 128, block_n: int = 1024,
+                        interpret: bool = False):
+    b, w = qc.shape
+    n, w2 = dbc.shape
+    assert w == w2 and k <= n
+    bq = min(block_q, b)
+    bn = min(block_n, n)
+    b_pad = cdiv(b, bq) * bq - b
+    n_pad = cdiv(n, bn) * bn - n
+    qc_p = jnp.pad(qc, ((0, b_pad), (0, 0)))
+    dbc_p = jnp.pad(dbc, ((0, n_pad), (0, 0)))
+    b_t = qc_p.shape[0] // bq
+    n_t = dbc_p.shape[0] // bn
+
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_hamming_kernel, k=k, bn=bn, n=n, n_n=n_t, w=w),
+        grid=(b_t, n_t),
+        in_specs=[
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qc_p.shape[0], k), jnp.int32),
+            jax.ShapeDtypeStruct((qc_p.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qc_p, dbc_p)
+    return out_d[:b], out_i[:b]

@@ -1,0 +1,28 @@
+"""Public Hamming top-k op."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, on_tpu
+from repro.kernels.hamming_topk import ref
+from repro.kernels.hamming_topk.kernel import hamming_topk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas",
+                                             "interpret"))
+def hamming_topk(qc: jnp.ndarray, dbc: jnp.ndarray, k: int, *,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k smallest Hamming distances between packed uint32 codes."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return hamming_topk_pallas(
+            qc, dbc, k,
+            interpret=interpret_default() if interpret is None else interpret)
+    return ref.hamming_topk_ref(qc, dbc, k)

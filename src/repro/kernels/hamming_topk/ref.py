@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: top-k nearest packed codes by Hamming distance."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_dist_ref(qc: jnp.ndarray, dbc: jnp.ndarray) -> jnp.ndarray:
+    """qc: (b, w) u32; dbc: (n, w) u32 -> (b, n) int32 Hamming distance."""
+    x = jnp.bitwise_xor(qc[:, None, :], dbc[None, :, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_topk_ref(qc: jnp.ndarray, dbc: jnp.ndarray,
+                     k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dist = hamming_dist_ref(qc, dbc)
+    negv, idx = jax.lax.top_k(-dist, k)
+    return (-negv).astype(jnp.int32), idx.astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.kernels.lsh_hash.ops import lsh_hash, unpack_bits
+
+__all__ = ["lsh_hash", "unpack_bits"]

@@ -1,0 +1,67 @@
+"""Public LSH-hash op: pallas on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import cdiv, interpret_default, on_tpu
+from repro.kernels.lsh_hash import ref
+from repro.kernels.lsh_hash.kernel import lsh_hash_pallas
+
+
+def _tail_mask(k: int) -> np.uint32:
+    rem = k % 32
+    return np.uint32(0xFFFFFFFF) if rem == 0 else np.uint32((1 << rem) - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lsh_hash(v: jnp.ndarray, h: jnp.ndarray, *,
+             use_pallas: bool | None = None,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Packed hyperplane LSH codes: (n, d), (d, k) -> (n, ceil(k/32)) u32.
+
+    Zero-padded hyperplane columns hash to bit 1 (sign(0) >= 0), so the
+    packed tail bits beyond ``k`` are masked to 0 to keep codes canonical.
+    """
+    k = h.shape[1]
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        codes = lsh_hash_pallas(
+            v, h,
+            interpret=interpret_default() if interpret is None else interpret)
+        n_words = cdiv(k, 32)
+        mask = jnp.full((n_words,), 0xFFFFFFFF, dtype=jnp.uint32)
+        mask = mask.at[-1].set(_tail_mask(k))
+        return codes & mask[None, :]
+    return ref.lsh_hash_ref(v, h)
+
+
+def unpack_bits(codes: jnp.ndarray, k: int) -> jnp.ndarray:
+    return ref.unpack_bits_ref(codes, k)
+
+
+def codes_to_int(codes: np.ndarray, k: int) -> np.ndarray:
+    """(n, n_words) uint32 -> (n,) python-int-safe object/uint64 keys.
+
+    For k <= 64 returns uint64 (fast path); beyond that returns object
+    array of python ints (arbitrary precision) -- ordering semantics
+    identical either way (little-endian word significance).
+    """
+    codes = np.asarray(codes)
+    n, n_words = codes.shape
+    if k <= 64 and n_words <= 2:
+        lo = codes[:, 0].astype(np.uint64)
+        hi = codes[:, 1].astype(np.uint64) << np.uint64(32) \
+            if n_words > 1 else np.uint64(0)
+        return lo | hi
+    out = np.empty(n, dtype=object)
+    for i in range(n):
+        acc = 0
+        for w in range(n_words):
+            acc |= int(codes[i, w]) << (32 * w)
+        out[i] = acc
+    return out

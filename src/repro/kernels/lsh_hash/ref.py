@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for hyperplane LSH hashing with bit-packing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv
+
+
+def lsh_hash_ref(v: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """sign(v @ h) packed little-endian into uint32 words.
+
+    v: (n, d) float; h: (d, k) float -> (n, ceil(k/32)) uint32.
+    Bit j of word w is 1 iff v . h[:, 32*w + j] >= 0.
+    """
+    n, d = v.shape
+    d2, k = h.shape
+    assert d == d2, (v.shape, h.shape)
+    proj = v.astype(jnp.float32) @ h.astype(jnp.float32)       # (n, k)
+    bits = (proj >= 0).astype(jnp.uint32)                      # (n, k)
+    n_words = cdiv(k, 32)
+    pad = n_words * 32 - k
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    bits = bits.reshape(n, n_words, 32)
+    pow2 = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * pow2, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits_ref(codes: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(n, n_words) uint32 -> (n, k) {0,1} int32 (little-endian)."""
+    n, n_words = codes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (codes[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(n, n_words * 32)[:, :k].astype(jnp.int32)

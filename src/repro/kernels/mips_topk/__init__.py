@@ -1,0 +1,3 @@
+from repro.kernels.mips_topk.ops import mips_topk
+
+__all__ = ["mips_topk"]

@@ -1,0 +1,43 @@
+"""Public MIPS top-k op with sharded-search helper."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, on_tpu
+from repro.kernels.mips_topk import ref
+from repro.kernels.mips_topk.kernel import mips_topk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas",
+                                             "interpret"))
+def mips_topk(q: jnp.ndarray, db: jnp.ndarray, k: int, *,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k inner products of each query row against the DB rows."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return mips_topk_pallas(
+            q, db, k,
+            interpret=interpret_default() if interpret is None else interpret)
+    return ref.mips_topk_ref(q, db, k)
+
+
+def merge_sharded_topk(vals: jnp.ndarray, idx: jnp.ndarray,
+                       k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge per-shard top-k results: (s, b, k) -> global (b, k).
+
+    Used after an all_gather of per-shard candidates: k << N makes the
+    gathered tensor tiny (s*k entries per query) so the collective cost
+    is negligible next to the sharded scan.
+    """
+    s, b, kk = vals.shape
+    flat_v = jnp.swapaxes(vals, 0, 1).reshape(b, s * kk)
+    flat_i = jnp.swapaxes(idx, 0, 1).reshape(b, s * kk)
+    v, pos = jax.lax.top_k(flat_v, k)
+    return v, jnp.take_along_axis(flat_i, pos, axis=1)

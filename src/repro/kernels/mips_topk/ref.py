@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for blocked maximum-inner-product top-k search."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mips_topk_ref(q: jnp.ndarray, db: jnp.ndarray,
+                  k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q: (b, d); db: (n, d) -> (vals (b, k) f32, idx (b, k) i32).
+
+    Materializes the full (b, n) score matrix -- the thing the kernel
+    avoids.  Ties broken by lower index (jax.lax.top_k semantics).
+    """
+    scores = q.astype(jnp.float32) @ db.astype(jnp.float32).T
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

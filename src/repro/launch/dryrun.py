@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+``.lower().compile()`` must succeed on the single-pod (16, 16) mesh and
+the 2-pod (2, 16, 16) mesh for every assigned cell;
+``memory_analysis()`` proves fit, ``cost_analysis()`` + the HLO
+collective parser feed EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import GNNConfig, LMConfig, RecSysConfig, \
+    ShapeSpec
+from repro.common.registry import get_arch, list_archs
+from repro.common.sharding import LogicalRules, rules_for_family
+from repro.distributed.hlo_analysis import collective_breakdown, \
+    roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import ModelAPI, get_api
+from repro.models.sharding_ctx import activation_sharding
+from repro.train.optimizer import AdafactorState, AdamWState, \
+    make_train_step, opt_init
+from jax.sharding import NamedSharding
+
+
+def _axes_tree(api: ModelAPI):
+    """Logical-axes pytree without allocating full params: init() the
+    reduced config (same tree structure) and keep its axes twin."""
+    reduced_api = get_api(api.cfg.reduced())
+    _, axes = reduced_api.init(jax.random.PRNGKey(0))
+    return axes
+
+
+def _spec_tree(mesh, rules: LogicalRules, shapes_tree, axes_tree):
+    def one(sds, ax):
+        if ax is None:
+            ax = (None,) * len(sds.shape)
+        spec = rules.spec(mesh, sds.shape, ax)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(
+        one, shapes_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _is_tuple_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+TRAIN_KINDS = ("training", "sampled-training", "full-batch",
+               "full-batch-large", "batched-small-graphs")
+
+# per-cell policy: optimizer + microbatch count (DESIGN.md §4)
+def _train_policy(cfg) -> dict:
+    if cfg.family == "lm-moe" and cfg.param_count() > 1e11:
+        # 400B llama4: Adafactor (factored 2nd moment) + bf16 stored
+        # weights + bf16 grad accumulation — 256 v5e chips give only
+        # ~10 bytes/param of headroom; fp32 Adam would need ~4x chips
+        return {"optimizer": "adafactor", "n_microbatches": 16,
+                "param_dtype": jnp.bfloat16,
+                "accum_dtype": jnp.bfloat16}
+    if cfg.family in ("lm-dense", "lm-moe"):
+        # >=10B dense models carry bigger per-layer activations: halve
+        # the microbatch again (phi3 train_4k: 17.4 -> <16 GiB)
+        micro = 16 if cfg.param_count() > 1e10 else 8
+        return {"optimizer": "adamw", "n_microbatches": micro,
+                "param_dtype": jnp.float32,
+                "accum_dtype": jnp.float32}
+    return {"optimizer": "adamw", "n_microbatches": 1,
+            "param_dtype": jnp.float32, "accum_dtype": jnp.float32}
+
+
+def _build_cell(cfg, shape, api, mesh, rules, *,
+                include_optimizer: bool, n_micro_override=None):
+    """Returns (fn, args, donate) ready for jax.jit."""
+    pol = _train_policy(cfg)
+    # §Perf HC1.3: serving cells read bf16 weights (inference
+    # deployments don't pay fp32 weight traffic); training keeps the
+    # per-arch policy dtype (fp32 master unless the 400B policy).
+    pdt = pol["param_dtype"] if shape.kind in TRAIN_KINDS \
+        else jnp.bfloat16
+    if isinstance(cfg, GNNConfig):
+        d_feat = shape.d_feat or 128
+        param_shapes = jax.eval_shape(
+            lambda k: api.init(k, d_feat=d_feat)[0],
+            jax.random.PRNGKey(0))
+    else:
+        param_shapes = jax.eval_shape(
+            lambda k: api.init(k, dtype=pdt)[0], jax.random.PRNGKey(0))
+    axes = _axes_tree(api)
+    params_in = _spec_tree(mesh, rules, param_shapes, axes)
+    batch_shapes = api.input_specs(shape)
+    batch_axes = api.input_axes(shape)
+    batch_in = _spec_tree(mesh, rules, batch_shapes, batch_axes)
+
+    step = api.step_fn(shape)
+    if shape.kind in TRAIN_KINDS and include_optimizer:
+        n_micro = n_micro_override or pol["n_microbatches"]
+        # each microbatch slice must stay divisible by the batch-shard
+        # count (pod*data) or GSPMD has to reshard mid-scan
+        gb = getattr(shape, "global_batch", 0) or getattr(
+            shape, "batch", 0)
+        if gb:
+            shards = mesh.shape.get("pod", 1) * mesh.shape["data"]
+            n_micro = max(1, min(n_micro, gb // shards))
+            while gb % n_micro:
+                n_micro -= 1
+        train = make_train_step(lambda p, b: step(p, b),
+                                n_microbatches=n_micro,
+                                optimizer=pol["optimizer"],
+                                accum_dtype=pol["accum_dtype"])
+        opt_shapes = jax.eval_shape(
+            lambda p: opt_init(p, pol["optimizer"]), param_shapes)
+        if pol["optimizer"] == "adamw":
+            opt_axes = AdamWState(step=(), mu=axes, nu=axes)
+        else:
+            # factored stats exist only for >=2-D params (leading
+            # "layers" stacking counts as a dim; optimizer.py treats
+            # stacked (L, d) vectors as matrices, which is fine)
+            def _vr_ax(a):
+                return a[:-1] if len(a) >= 2 else ()
+
+            def _vc_ax(a):
+                return a[:-2] + a[-1:] if len(a) >= 2 else ()
+
+            def _v_ax(a):
+                return a if len(a) < 2 else ()
+            opt_axes = AdafactorState(
+                step=(),
+                vr=jax.tree.map(_vr_ax, axes, is_leaf=_is_tuple_leaf),
+                vc=jax.tree.map(_vc_ax, axes, is_leaf=_is_tuple_leaf),
+                v=jax.tree.map(_v_ax, axes, is_leaf=_is_tuple_leaf))
+        opt_in = _spec_tree(mesh, rules, opt_shapes, opt_axes)
+        return train, (params_in, opt_in, batch_in), (0, 1)
+    if shape.is_decode:
+        return step, (params_in, batch_in), (1,)  # donate caches
+    return step, (params_in, batch_in), ()
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               include_optimizer: bool = True,
+               probe: bool = True) -> dict:
+    cfg = get_arch(arch)
+    shape = cfg.shape(shape_name)
+    api = get_api(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_family(cfg.family, shape.kind)
+
+    t0 = time.time()
+    fn, args, donate = _build_cell(cfg, shape, api, mesh, rules,
+                                   include_optimizer=include_optimizer)
+    with mesh:
+        with activation_sharding(mesh, rules):
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_breakdown(hlo)
+    coll_bytes = sum(b for _, b in coll.values())
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # ---- probe pass: XLA cost_analysis counts while-loop bodies once,
+    # so scanned-layer costs are undercounted.  Lower 1- and 2-layer
+    # variants with all scans unrolled (REPRO_UNROLL_SCANS) and
+    # extrapolate affinely: f(L) = f(1) + (L-1) * (f(2) - f(1)).
+    adjusted = None
+    if probe:
+        try:
+            adjusted = _probe_costs(cfg, shape, mesh, rules,
+                                    include_optimizer)
+        except Exception as ex:  # noqa: BLE001
+            adjusted = {"error": f"{type(ex).__name__}: {ex}"}
+
+    if adjusted and "flops_per_device" in adjusted:
+        terms = roofline_terms(adjusted["flops_per_device"],
+                               adjusted["hbm_bytes_per_device"],
+                               adjusted["collective_bytes_per_device"],
+                               n_chips)
+    else:
+        terms = roofline_terms(flops, hbm_bytes, coll_bytes, n_chips)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "multi_pod": multi_pod,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "raw_flops_per_device": flops,
+        "raw_hbm_bytes_per_device": hbm_bytes,
+        "raw_collective_bytes_per_device": coll_bytes,
+        "collectives": {k: {"count": c, "bytes": b}
+                        for k, (c, b) in coll.items()},
+        "adjusted": adjusted,
+        "flops_per_device": (adjusted or {}).get(
+            "flops_per_device", flops),
+        "hbm_bytes_per_device": (adjusted or {}).get(
+            "hbm_bytes_per_device", hbm_bytes),
+        "collective_bytes_per_device": (adjusted or {}).get(
+            "collective_bytes_per_device", coll_bytes),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.temp_size_in_bytes
+            + mem.argument_size_in_bytes,
+        },
+        "roofline": terms,
+        "sharding_fallbacks": rules.fallbacks,
+    }
+    return result
+
+
+def _probe_one(cfg, shape, mesh, rules, include_optimizer) -> dict:
+    api = get_api(cfg)
+    fn, args, donate = _build_cell(
+        cfg, shape, api, mesh, rules,
+        include_optimizer=include_optimizer, n_micro_override=1)
+    with mesh:
+        with activation_sharding(mesh, rules):
+            compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_breakdown(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(b for _, b in coll.values())),
+    }
+
+
+def _probe_costs(cfg, shape, mesh, rules, include_optimizer) -> dict:
+    os.environ["REPRO_UNROLL_SCANS"] = "1"
+    try:
+        layer_field = None
+        if hasattr(cfg, "n_layers"):
+            layer_field = "n_layers"
+        if layer_field is None:
+            p = _probe_one(cfg, shape, mesh, rules, include_optimizer)
+            return {"flops_per_device": p["flops"],
+                    "hbm_bytes_per_device": p["bytes"],
+                    "collective_bytes_per_device": p["coll"],
+                    "method": "unrolled-direct"}
+        import dataclasses as dc
+        step = getattr(cfg, "moe_every", 1) if getattr(
+            cfg, "is_moe", False) else 1
+        l1, l2 = step, 2 * step
+        c1 = dc.replace(cfg, n_layers=l1)
+        c2 = dc.replace(cfg, n_layers=l2)
+        p1 = _probe_one(c1, shape, mesh, rules, include_optimizer)
+        p2 = _probe_one(c2, shape, mesh, rules, include_optimizer)
+        blocks_true = cfg.n_layers // step
+
+        def extra(k):
+            slope = p2[k] - p1[k]
+            return p1[k] + (blocks_true - 1) * slope
+        return {"flops_per_device": extra("flops"),
+                "hbm_bytes_per_device": extra("bytes"),
+                "collective_bytes_per_device": extra("coll"),
+                "probe_l1": p1, "probe_l2": p2,
+                "method": f"affine-extrapolation blocks={blocks_true}"}
+    finally:
+        os.environ.pop("REPRO_UNROLL_SCANS", None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        cfg = get_arch(a)
+        names = [s.name for s in cfg.shapes]
+        if args.shape:
+            names = [n for n in names if n == args.shape]
+        for n in names:
+            meshes = [args.multi_pod]
+            if args.both_meshes:
+                meshes = [False, True]
+            for mp in meshes:
+                cells.append((a, n, mp))
+
+    n_fail = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        path = out_dir / f"{tag}.json"
+        if args.skip_existing and path.exists():
+            print(f"[skip] {tag}")
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, multi_pod=mp)
+            path.write_text(json.dumps(res, indent=2, default=str))
+            r = res["roofline"]
+            print(f"  ok: compile={res['compile_s']}s "
+                  f"flops/dev={res['flops_per_device']:.3e} "
+                  f"peak_mem={res['memory']['peak_bytes']/2**30:.2f}GiB "
+                  f"bottleneck={r['bottleneck']}", flush=True)
+        except Exception as ex:  # noqa: BLE001
+            n_fail += 1
+            path.with_suffix(".err").write_text(
+                f"{ex}\n\n{traceback.format_exc()}")
+            print(f"  FAIL: {type(ex).__name__}: {ex}", flush=True)
+    print(f"done: {len(cells) - n_fail}/{len(cells)} cells green")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Unified model API: (arch config, shape) -> init / step fns / inputs.
+
+The single dispatch point used by smoke tests, the training launcher,
+and the multi-pod dry-run.  ``step_fn`` returns the jittable callable
+for a shape cell; ``input_specs`` returns ShapeDtypeStruct stand-ins
+(no allocation) with matching logical axes for sharding; ``demo_batch``
+materializes small real inputs for reduced-config smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ArchConfig, GNNConfig, LMConfig, \
+    RecSysConfig, ShapeSpec
+from repro.models import gnn, recsys, transformer
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[..., Tuple[Any, Any]]          # key, dtype -> params, axes
+    step_fn: Callable[[ShapeSpec], Callable]      # shape -> jittable step
+    input_specs: Callable[[ShapeSpec], Dict[str, Any]]
+    input_axes: Callable[[ShapeSpec], Dict[str, Any]]
+    demo_batch: Callable[[ShapeSpec, int], Dict[str, Any]]
+    aux: Any = None                               # recsys: field offsets
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+def _lm_api(cfg: LMConfig) -> ModelAPI:
+    def init(key, dtype=jnp.float32):
+        return transformer.init_params(cfg, key, dtype)
+
+    def step_fn(shape: ShapeSpec):
+        if shape.kind == "training":
+            def train_step(params, batch):
+                return transformer.loss_fn(params, batch, cfg)
+            return train_step
+        if shape.is_prefill:
+            def prefill_step(params, batch):
+                return transformer.prefill(params, batch["tokens"], cfg,
+                                           max_len=shape.seq_len)
+            return prefill_step
+        # decode shapes
+        def serve_step(params, batch):
+            return transformer.decode_step(
+                params, batch["tokens"], batch["caches"],
+                batch["cache_len"], cfg)
+        return serve_step
+
+    def input_specs(shape: ShapeSpec):
+        b = shape.global_batch
+        if shape.kind == "training":
+            return {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len),
+                                                   jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, shape.seq_len),
+                                                   jnp.int32)}
+        if shape.is_prefill:
+            return {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len),
+                                                   jnp.int32)}
+        caches = jax.eval_shape(
+            lambda: transformer.make_kv_cache(cfg, b, shape.seq_len))
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "caches": caches,
+                "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def input_axes(shape: ShapeSpec):
+        if shape.kind == "training" or shape.is_prefill:
+            ax = {"tokens": ("batch", "seq")}
+            if shape.kind == "training":
+                ax["labels"] = ("batch", "seq")
+            return ax
+        return {"tokens": ("batch", None),
+                "caches": transformer.kv_cache_axes(cfg),
+                "cache_len": ()}
+
+    def demo_batch(shape: ShapeSpec, seed: int = 0):
+        rng = np.random.Generator(np.random.PCG64(seed))
+        b = min(shape.global_batch, 2) or 1
+        l = min(shape.seq_len, 32)
+        toks = rng.integers(0, cfg.vocab_size, size=(b, l + 1),
+                            dtype=np.int32)
+        if shape.kind == "training":
+            return {"tokens": jnp.asarray(toks[:, :-1]),
+                    "labels": jnp.asarray(toks[:, 1:])}
+        if shape.is_prefill:
+            return {"tokens": jnp.asarray(toks[:, :-1])}
+        caches = transformer.make_kv_cache(cfg, b, l, jnp.bfloat16)
+        return {"tokens": jnp.asarray(toks[:, :1]), "caches": caches,
+                "cache_len": jnp.int32(0)}
+
+    return ModelAPI(cfg, init, step_fn, input_specs, input_axes,
+                    demo_batch)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+def _gnn_api(cfg: GNNConfig) -> ModelAPI:
+    def init(key, dtype=jnp.float32, d_feat: int = 128):
+        return gnn.init_params(cfg, key, d_feat, dtype=dtype)
+
+    def step_fn(shape: ShapeSpec):
+        def train_step(params, batch):
+            return gnn.loss_fn(params, batch, cfg)
+        return train_step
+
+    def _dims(shape: ShapeSpec) -> Tuple[int, int, int]:
+        def pad256(x: int) -> int:
+            return ((x + 255) // 256) * 256  # mesh-divisible padding
+
+        if shape.name == "minibatch_lg":
+            # sampled subgraph: seeds * prod(fanout) upper bound
+            n = shape.batch_nodes * (1 + shape.fanout[0] *
+                                     (1 + shape.fanout[1]))
+            e = shape.batch_nodes * shape.fanout[0] * \
+                (1 + shape.fanout[1])
+            return pad256(n), pad256(e), shape.d_feat
+        if shape.name == "molecule":
+            return (pad256(shape.n_nodes * shape.graph_batch),
+                    pad256(shape.n_edges * shape.graph_batch),
+                    shape.d_feat)
+        return pad256(shape.n_nodes), pad256(shape.n_edges), \
+            shape.d_feat
+
+    def input_specs(shape: ShapeSpec):
+        n, e, df = _dims(shape)
+        return {"node_feat": jax.ShapeDtypeStruct((n, df), jnp.float32),
+                "edge_index": jax.ShapeDtypeStruct((2, e), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((n,), jnp.int32),
+                "label_mask": jax.ShapeDtypeStruct((n,), jnp.bool_)}
+
+    def input_axes(shape: ShapeSpec):
+        return {"node_feat": ("nodes", None),
+                "edge_index": (None, "edges"),
+                "labels": ("nodes",),
+                "label_mask": ("nodes",)}
+
+    def demo_batch(shape: ShapeSpec, seed: int = 0):
+        rng = np.random.Generator(np.random.PCG64(seed))
+        n, e, df = 40, 120, 128  # df matches init()'s default d_feat
+        ei = rng.integers(0, n, size=(2, e), dtype=np.int32)
+        return {"node_feat": jnp.asarray(
+                    rng.standard_normal((n, df)).astype(np.float32)),
+                "edge_index": jnp.asarray(ei),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.n_classes, size=(n,),
+                                 dtype=np.int32)),
+                "label_mask": jnp.asarray(np.ones(n, dtype=bool))}
+
+    return ModelAPI(cfg, init, step_fn, input_specs, input_axes,
+                    demo_batch)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+def _recsys_api(cfg: RecSysConfig) -> ModelAPI:
+    offsets_box = {}
+
+    def init(key, dtype=jnp.float32):
+        params, axes, offsets = recsys.init_params(cfg, key, dtype)
+        offsets_box["offsets"] = offsets
+        return params, axes
+
+    def _offsets():
+        if "offsets" not in offsets_box:
+            off = np.concatenate(
+                [[0], np.cumsum(cfg.vocab_sizes)[:-1]]).astype(np.int64)
+            offsets_box["offsets"] = off
+        return offsets_box["offsets"]
+
+    def step_fn(shape: ShapeSpec):
+        if shape.kind == "training":
+            def train_step(params, batch):
+                return recsys.loss_fn(params, batch, cfg, _offsets())
+            return train_step
+
+        def serve_step(params, batch):
+            return recsys.serve_fn(params, batch, cfg, _offsets())
+        return serve_step
+
+    def _batch_specs(b: int, with_labels: bool):
+        specs: Dict[str, Any] = {}
+        if cfg.interaction in ("fm", "cross"):
+            specs["sparse"] = jax.ShapeDtypeStruct((b, cfg.n_sparse),
+                                                   jnp.int32)
+            if cfg.n_dense:
+                specs["dense"] = jax.ShapeDtypeStruct((b, cfg.n_dense),
+                                                      jnp.float32)
+        else:
+            specs["hist"] = jax.ShapeDtypeStruct((b, cfg.seq_len),
+                                                 jnp.int32)
+            specs["hist_len"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+            specs["target"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        if with_labels and cfg.interaction != "multi-interest":
+            specs["labels"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+        return specs
+
+    def input_specs(shape: ShapeSpec):
+        if shape.kind == "retrieval-scoring":
+            specs = _batch_specs(shape.batch, with_labels=False)
+            specs.pop("target", None)
+            if cfg.interaction == "multi-interest":
+                specs["candidates"] = jax.ShapeDtypeStruct(
+                    (shape.n_candidates,), jnp.int32)
+            else:
+                # non-retrieval recsys archs score the candidate slab as
+                # a huge serve batch (batched-dot, no loop)
+                specs = _batch_specs(shape.n_candidates,
+                                     with_labels=False)
+            return specs
+        return _batch_specs(shape.batch,
+                            with_labels=shape.kind == "training")
+
+    def input_axes(shape: ShapeSpec):
+        specs = input_specs(shape)
+        ax: Dict[str, Any] = {}
+        for k, v in specs.items():
+            if k == "candidates":
+                ax[k] = ("candidates",)
+            elif v.ndim == 2:
+                ax[k] = ("batch", None)
+            elif v.ndim == 1:
+                ax[k] = ("batch",)
+            else:
+                ax[k] = ()
+        return ax
+
+    def demo_batch(shape: ShapeSpec, seed: int = 0):
+        rng = np.random.Generator(np.random.PCG64(seed))
+        rcfg = cfg
+        b = min(shape.batch or 4, 8)
+        total_vocab = int(sum(rcfg.vocab_sizes))
+        out: Dict[str, Any] = {}
+        if rcfg.interaction in ("fm", "cross"):
+            out["sparse"] = jnp.asarray(np.stack(
+                [rng.integers(0, v, size=b) for v in rcfg.vocab_sizes],
+                axis=1).astype(np.int32))
+            if rcfg.n_dense:
+                out["dense"] = jnp.asarray(rng.standard_normal(
+                    (b, rcfg.n_dense)).astype(np.float32))
+        else:
+            s = rcfg.seq_len
+            out["hist"] = jnp.asarray(rng.integers(
+                0, total_vocab, size=(b, s), dtype=np.int32))
+            out["hist_len"] = jnp.asarray(rng.integers(
+                1, s + 1, size=(b,), dtype=np.int32))
+            out["target"] = jnp.asarray(rng.integers(
+                0, total_vocab, size=(b,), dtype=np.int32))
+        if shape.kind == "training" and \
+                rcfg.interaction != "multi-interest":
+            out["labels"] = jnp.asarray(
+                rng.integers(0, 2, size=(b,)).astype(np.float32))
+        if shape.kind == "retrieval-scoring" and \
+                rcfg.interaction == "multi-interest":
+            out.pop("target", None)
+            out["candidates"] = jnp.asarray(rng.integers(
+                0, total_vocab, size=(64,), dtype=np.int32))
+        return out
+
+    return ModelAPI(cfg, init, step_fn, input_specs, input_axes,
+                    demo_batch)
+
+
+def get_api(cfg: ArchConfig) -> ModelAPI:
+    if isinstance(cfg, LMConfig):
+        return _lm_api(cfg)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_api(cfg)
+    if isinstance(cfg, RecSysConfig):
+        return _recsys_api(cfg)
+    raise TypeError(type(cfg))

@@ -1,0 +1,292 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention, SwiGLU, MoE.
+
+Pure functions over explicit parameter pytrees (no module framework):
+params are dicts of arrays, init functions return (params, logical_axes)
+twins so the distribution layer can derive shardings mechanically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import LMConfig, MoEConfig
+from repro.kernels.flash_attention.ops import causal_blocked_attention, \
+    chunked_attention, dense_decode_attention, flash_attention
+from repro.kernels.common import on_tpu
+from repro.models.sharding_ctx import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, scale: float | None = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    scale = scale if scale is not None else (2.0 / (in_dim + out_dim)) ** 0.5
+    return (jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5
+            ) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (computed on the fly: a materialized table
+# at 500k positions would cost 268 MB/device; the trig is negligible
+# next to the projections)
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jnp.ndarray, d_head: int,
+                theta: float = 10000.0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (l,) or (b, l) int -> (..., l, half) cos/sin."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (b, h, l, d); cos/sin: (l, half) or (b, l, half)."""
+    half = x.shape[-1] // 2
+    if cos.ndim == 2:                             # (l, half) -> bcast
+        c, s = cos[None, None], sin[None, None]
+    else:                                         # (b, l, half)
+        c, s = cos[:, None], sin[:, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1
+                           ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA, RoPE, optional bias, KV cache)
+# ---------------------------------------------------------------------------
+def attention_init(key, cfg: LMConfig, dtype=jnp.float32
+                   ) -> Tuple[Params, Params]:
+    d, h = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * h, dtype=dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * h, dtype=dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * h, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * h, d, dtype=dtype),
+    }
+    axes = {
+        "wq": ("embed", "qkv_fused"),
+        "wk": ("embed", "qkv_fused"),
+        "wv": ("embed", "qkv_fused"),
+        "wo": ("qkv_fused", "embed"),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((cfg.n_heads * h,), dtype)
+        params["bk"] = jnp.zeros((cfg.n_kv_heads * h,), dtype)
+        params["bv"] = jnp.zeros((cfg.n_kv_heads * h,), dtype)
+        axes.update({"bq": ("qkv_fused",), "bk": ("qkv_fused",),
+                     "bv": ("qkv_fused",)})
+    return params, axes
+
+
+def attention_fwd(p: Params, x: jnp.ndarray, cfg: LMConfig,
+                  positions: jnp.ndarray, *, causal: bool = True,
+                  kv_cache: Optional[Dict[str, jnp.ndarray]] = None,
+                  cache_len: Optional[jnp.ndarray] = None,
+                  block_k: int = 1024):
+    """x: (b, l, d).  With ``kv_cache`` (decode): appends current K/V at
+    ``cache_len`` and attends over the cache; returns (out, new_cache).
+    """
+    b, l, d = x.shape
+    h, hd = cfg.n_heads, cfg.d_head
+    hkv = cfg.n_kv_heads
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, l, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, l, hkv, hd).transpose(0, 2, 1, 3)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if kv_cache is not None:
+        # cache layout: (b, hkv, max_len, hd); kv seq dim shardable
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        start = cache_len if cache_len is not None else 0
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 start, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 start, axis=2)
+        new_cache = {"k": ck, "v": cv}
+        if l > 1:
+            # prefill: cache starts empty -> attend causally over the
+            # current sequence only (cheaper than scanning max_len)
+            if causal and l >= 2048:
+                out = causal_blocked_attention(q, k, v,
+                                               q_chunk=max(2048, l // 8))
+            else:
+                out = chunked_attention(q, k, v, causal=causal,
+                                        block_k=block_k)
+        else:
+            # decode: attend over the filled cache prefix
+            kv_len = None
+            if cache_len is not None:
+                kv_len = jnp.full((b,), cache_len + l, dtype=jnp.int32)
+            ck = shard(ck, ("batch", "kv_heads", "kv_seq", None))
+            cv = shard(cv, ("batch", "kv_heads", "kv_seq", None))
+            out = dense_decode_attention(q, ck, cv, kv_len=kv_len)
+    else:
+        k = shard(k, ("batch", "kv_heads", "kv_seq", None))
+        v = shard(v, ("batch", "kv_heads", "kv_seq", None))
+        if on_tpu():
+            out = flash_attention(q, k, v, causal=causal)
+        elif causal and l >= 2048:
+            out = causal_blocked_attention(q, k, v,
+                                           q_chunk=max(2048, l // 8))
+        else:
+            out = chunked_attention(q, k, v, causal=causal,
+                                    block_k=block_k)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, h * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU FFN
+# ---------------------------------------------------------------------------
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32
+                ) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype=dtype),
+        "w_down": dense_init(ks[2], d_ff, d, dtype=dtype),
+    }
+    axes = {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+    return params, axes
+
+
+def swiglu_fwd(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    return (g * u) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN: token-choice top-k routing, capacity-bounded gather dispatch
+# ---------------------------------------------------------------------------
+def moe_init(key, d: int, moe: MoEConfig, dtype=jnp.float32
+             ) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 5)
+    e, f = moe.n_experts, moe.d_ff_expert
+
+    def stack(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32)
+                * (2.0 / (shape[-2] + shape[-1])) ** 0.5).astype(dtype)
+
+    params = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": stack(ks[1], (e, d, f)),
+        "w_up": stack(ks[2], (e, d, f)),
+        "w_down": stack(ks[3], (e, f, d)),
+    }
+    # expert weights: experts->model, f->data (Megatron column/row
+    # split: each device holds a full-depth f-slice of its local
+    # experts, so the FFN needs NO weight all-gather — only an
+    # activation psum after w_down).  "expert_embed" stays unsharded
+    # by design; FSDP-gathering 16B of expert weights per block costs
+    # ~2 GB/block of transient HBM (measured in the dry-run).
+    axes = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "expert_embed", "expert_mlp"),
+        "w_up": ("experts", "expert_embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "expert_embed"),
+    }
+    if moe.n_shared:
+        shared, shared_axes = swiglu_init(
+            ks[4], d, moe.n_shared * f, dtype=dtype)
+        params["shared"] = shared
+        axes["shared"] = shared_axes
+    return params, axes
+
+
+def moe_fwd(p: Params, x: jnp.ndarray, moe: MoEConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, l, d) -> (out, aux_loss).
+
+    Dispatch: per-expert top-capacity gather (static shapes, EP-shardable
+    over the 'experts' axis).  Each expert picks its top-C tokens among
+    those that routed to it (ties to router prob); overflow tokens drop
+    (capacity_factor bounds them), which matches GShard/Switch
+    semantics and keeps every shape static for pjit.
+    """
+    b, l, d = x.shape
+    t = b * l
+    e, k_top = moe.n_experts, moe.top_k
+    xf = x.reshape(t, d)
+
+    xf = shard(xf, ("tokens", None))
+    logits = xf.astype(jnp.float32) @ p["router"]          # (t, e)
+    logits = shard(logits, ("tokens", None))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k_top)      # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    # mask[t, e] = gating weight if e chosen else 0
+    choice = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    gates = jnp.einsum("tk,tke->te", gate_vals, choice)    # (t, e)
+
+    # load-balance aux loss (Switch):  e * sum_e (frac_tokens * frac_prob)
+    frac_tokens = choice.sum(axis=1).mean(axis=0)          # (e,)
+    frac_probs = probs.mean(axis=0)
+    aux = moe.router_aux_coef * e * jnp.sum(frac_tokens * frac_probs)
+
+    capacity = int(np.ceil(t * k_top / e * moe.capacity_factor))
+    capacity = max(1, min(capacity, t))
+    # per-expert top-capacity token selection by gate weight
+    sel_val, sel_idx = jax.lax.top_k(gates.T, capacity)    # (e, c)
+    live = sel_val > 0.0                                   # chosen & fits
+
+    xe = jnp.take(xf, sel_idx.reshape(-1), axis=0)
+    xe = shard(xe.reshape(e, capacity, d),
+               ("experts", None, None))                    # (e, c, d)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])    # (e, c, d)
+    ye = shard(ye, ("experts", None, None))
+    # §Perf HC2: keep the combine in the compute dtype — the fp32
+    # promotion from the gate product turned the scatter-add output
+    # into a full fp32 token tensor that GSPMD all-reduced across the
+    # expert shards (~20 GB per MoE block fwd at train_4k); bf16 +
+    # a token-sharded output constraint cuts that collective in half
+    # and lets the partitioner pick reduce-scatter.
+    ye = ye * (sel_val * live).astype(ye.dtype)[..., None]
+
+    out = jnp.zeros((t, d), dtype=ye.dtype).at[
+        sel_idx.reshape(-1)].add(ye.reshape(-1, d))
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + swiglu_fwd(p["shared"], xf)
+    return shard(out.reshape(b, l, d), ("batch", "seq", "embed")), aux

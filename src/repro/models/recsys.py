@@ -1,0 +1,368 @@
+"""RecSys models: DeepFM, DCN-v2, DIEN, MIND over a fused embedding bag.
+
+JAX has no native EmbeddingBag or CSR sparse — per the framework spec,
+lookups are built from ``jnp.take`` + ``segment_sum``/masked means over
+a single *fused* table (all fields concatenated row-wise with per-field
+offsets, the DLRM merged-table layout).  The fused table row dim is the
+model-parallel axis ("vocab_rows" -> model): each device owns a row
+shard and GSPMD turns ``take`` into the classic DLRM all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import RecSysConfig
+from repro.common.utils import ceil_to
+from repro.models.layers import dense_init
+from repro.models.sharding_ctx import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# fused embedding bag
+# ---------------------------------------------------------------------------
+def fused_table_init(key, vocab_sizes: Tuple[int, ...], dim: int,
+                     dtype=jnp.float32, pad_to: int = 256
+                     ) -> Tuple[jnp.ndarray, np.ndarray]:
+    """Returns (table (R, dim), offsets (F,)); R padded for sharding."""
+    offsets = np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]])
+    rows = ceil_to(int(sum(vocab_sizes)), pad_to)
+    table = (jax.random.normal(key, (rows, dim), jnp.float32)
+             * 0.01).astype(dtype)
+    return table, offsets.astype(np.int64)
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                     offsets: np.ndarray) -> jnp.ndarray:
+    """ids: (b, F) per-field local ids -> (b, F, dim)."""
+    flat = ids + jnp.asarray(offsets, dtype=ids.dtype)[None, :]
+    return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag_mean(table: jnp.ndarray, ids: jnp.ndarray,
+                       lengths: jnp.ndarray) -> jnp.ndarray:
+    """Mean-pool a ragged bag: ids (b, L) padded, lengths (b,) valid.
+
+    The jnp.take + masked-mean EmbeddingBag (no native op in JAX)."""
+    emb = jnp.take(table, ids, axis=0)                  # (b, L, d)
+    mask = (jnp.arange(ids.shape[1])[None, :] <
+            lengths[:, None]).astype(emb.dtype)
+    s = jnp.einsum("bld,bl->bd", emb, mask)
+    return s / jnp.maximum(lengths[:, None].astype(emb.dtype), 1.0)
+
+
+def _mlp_init(key, dims: Tuple[int, ...], dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(k, a, b, dtype=dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_axes(dims: Tuple[int, ...]):
+    return [{"w": (None, "mlp"), "b": ("mlp",)} for _ in dims[1:]]
+
+
+def _mlp_fwd(layers, x, final_act: bool = False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logit: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = logit.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(
+        jnp.exp(-jnp.abs(z))))
+
+
+# ---------------------------------------------------------------------------
+# DeepFM  [arXiv:1703.04247]
+# ---------------------------------------------------------------------------
+def deepfm_init(cfg: RecSysConfig, key, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    table, offsets = fused_table_init(k1, cfg.vocab_sizes,
+                                      cfg.embed_dim, dtype)
+    first, _ = fused_table_init(k2, cfg.vocab_sizes, 1, dtype)
+    mlp_dims = (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+    params = {"table": table, "first": first,
+              "mlp": _mlp_init(k3, mlp_dims, dtype),
+              "bias": jnp.zeros((), dtype)}
+    axes = {"table": ("vocab_rows", "embed"),
+            "first": ("vocab_rows", None),
+            "mlp": _mlp_axes(mlp_dims), "bias": ()}
+    return params, axes, offsets
+
+
+def deepfm_fwd(p: Params, batch: Dict[str, jnp.ndarray],
+               cfg: RecSysConfig, offsets) -> jnp.ndarray:
+    emb = embedding_lookup(p["table"], batch["sparse"], offsets)
+    emb = shard(emb, ("batch", None, "embed"))
+    first = embedding_lookup(p["first"], batch["sparse"],
+                             offsets)[..., 0].sum(-1)     # (b,)
+    s = emb.sum(axis=1)                                   # (b, d)
+    fm2 = 0.5 * (s * s - (emb * emb).sum(axis=1)).sum(-1)  # (b,)
+    deep = _mlp_fwd(p["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return first + fm2 + deep + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2  [arXiv:2008.13535]
+# ---------------------------------------------------------------------------
+def dcnv2_init(cfg: RecSysConfig, key, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    table, offsets = fused_table_init(k1, cfg.vocab_sizes,
+                                      cfg.embed_dim, dtype)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    ks = jax.random.split(k2, cfg.n_cross_layers)
+    cross = [{"w": dense_init(k, d0, d0, dtype=dtype),
+              "b": jnp.zeros((d0,), dtype)} for k in ks]
+    mlp_dims = (d0,) + cfg.mlp_dims + (1,)
+    params = {"table": table, "cross": cross,
+              "mlp": _mlp_init(k3, mlp_dims, dtype)}
+    axes = {"table": ("vocab_rows", "embed"),
+            "cross": [{"w": (None, "mlp"), "b": ("mlp",)}
+                      for _ in cross],
+            "mlp": _mlp_axes(mlp_dims)}
+    return params, axes, offsets
+
+
+def dcnv2_fwd(p: Params, batch: Dict[str, jnp.ndarray],
+              cfg: RecSysConfig, offsets) -> jnp.ndarray:
+    emb = embedding_lookup(p["table"], batch["sparse"], offsets)
+    x0 = jnp.concatenate(
+        [batch["dense"].astype(emb.dtype),
+         emb.reshape(emb.shape[0], -1)], axis=-1)
+    x0 = shard(x0, ("batch", None))
+    x = x0
+    for c in p["cross"]:
+        x = x0 * (x @ c["w"] + c["b"]) + x     # DCN-v2 full-rank cross
+    return _mlp_fwd(p["mlp"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN  [arXiv:1809.03672]
+# ---------------------------------------------------------------------------
+def _gru_init(key, d_in: int, d_h: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d_in, 3 * d_h, dtype=dtype),
+            "wh": dense_init(k2, d_h, 3 * d_h, dtype=dtype),
+            "b": jnp.zeros((3 * d_h,), dtype)}
+
+
+def _gru_cell(p, h, x, att: Optional[jnp.ndarray] = None):
+    """att: optional (b,) attention scalar -> AUGRU update-gate scaling."""
+    d_h = h.shape[-1]
+    gi = x @ p["wi"] + p["b"]
+    gh = h @ p["wh"]
+    r = jax.nn.sigmoid(gi[..., :d_h] + gh[..., :d_h])
+    z = jax.nn.sigmoid(gi[..., d_h:2 * d_h] + gh[..., d_h:2 * d_h])
+    n = jnp.tanh(gi[..., 2 * d_h:] + r * gh[..., 2 * d_h:])
+    if att is not None:
+        z = z * att[:, None]                   # AUGRU (DIEN eq. 6)
+    return (1.0 - z) * h + z * n
+
+
+def dien_init(cfg: RecSysConfig, key, dtype=jnp.float32):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    table, offsets = fused_table_init(k1, cfg.vocab_sizes,
+                                      cfg.embed_dim, dtype)
+    d_h = cfg.gru_dim
+    mlp_dims = (d_h + 2 * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+    params = {"table": table,
+              "gru1": _gru_init(k2, cfg.embed_dim, d_h, dtype),
+              "gru2": _gru_init(k3, cfg.embed_dim, d_h, dtype),
+              "att_w": dense_init(k4, d_h, cfg.embed_dim, dtype=dtype),
+              "mlp": _mlp_init(k5, mlp_dims, dtype)}
+    axes = {"table": ("vocab_rows", "embed"),
+            "gru1": {"wi": (None, "mlp"), "wh": (None, "mlp"),
+                     "b": ("mlp",)},
+            "gru2": {"wi": (None, "mlp"), "wh": (None, "mlp"),
+                     "b": ("mlp",)},
+            "att_w": (None, None),
+            "mlp": _mlp_axes(mlp_dims)}
+    return params, axes, offsets
+
+
+def dien_fwd(p: Params, batch: Dict[str, jnp.ndarray],
+             cfg: RecSysConfig, offsets) -> jnp.ndarray:
+    """batch: target (b,), hist (b, S), hist_len (b,)."""
+    b, s = batch["hist"].shape
+    d_h = cfg.gru_dim
+    tgt = jnp.take(p["table"], batch["target"], axis=0)   # (b, d)
+    hist = jnp.take(p["table"], batch["hist"], axis=0)    # (b, S, d)
+    hist = shard(hist, ("batch", "seq", "embed"))
+    valid = (jnp.arange(s)[None, :] <
+             batch["hist_len"][:, None])                  # (b, S)
+
+    # interest extraction GRU
+    def step1(h, xs):
+        x, m = xs
+        h_new = _gru_cell(p["gru1"], h, x)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, h
+
+    import os
+    unroll = True if os.environ.get("REPRO_UNROLL_SCANS") else 1
+    h0 = jnp.zeros((b, d_h), hist.dtype)
+    _, states = jax.lax.scan(
+        step1, h0, (jnp.moveaxis(hist, 1, 0), jnp.moveaxis(valid, 1, 0)),
+        unroll=unroll)
+    states = jnp.moveaxis(states, 0, 1)                   # (b, S, d_h)
+
+    # target attention over interest states
+    att_logits = jnp.einsum("bsh,hd,bd->bs", states, p["att_w"], tgt)
+    att_logits = jnp.where(valid, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=-1)             # (b, S)
+
+    # interest evolution AUGRU
+    def step2(h, xs):
+        x, a, m = xs
+        h_new = _gru_cell(p["gru2"], h, x, att=a)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, None
+
+    final, _ = jax.lax.scan(
+        step2, h0, (jnp.moveaxis(hist, 1, 0), jnp.moveaxis(att, 1, 0),
+                    jnp.moveaxis(valid, 1, 0)), unroll=unroll)
+
+    hist_mean = embedding_bag_mean(p["table"], batch["hist"],
+                                   batch["hist_len"])
+    feat = jnp.concatenate([final, tgt, hist_mean], axis=-1)
+    return _mlp_fwd(p["mlp"], feat)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# MIND  [arXiv:1904.08030]
+# ---------------------------------------------------------------------------
+def mind_init(cfg: RecSysConfig, key, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    table, offsets = fused_table_init(k1, cfg.vocab_sizes,
+                                      cfg.embed_dim, dtype)
+    params = {"table": table,
+              "s_mat": dense_init(k2, cfg.embed_dim, cfg.embed_dim,
+                                  dtype=dtype)}
+    axes = {"table": ("vocab_rows", "embed"), "s_mat": (None, None)}
+    return params, axes, offsets
+
+
+def _squash(x: jnp.ndarray) -> jnp.ndarray:
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def mind_user_interests(p: Params, hist: jnp.ndarray,
+                        hist_len: jnp.ndarray, cfg: RecSysConfig
+                        ) -> jnp.ndarray:
+    """B2I dynamic routing -> (b, K, d) interest capsules."""
+    b, s = hist.shape
+    k_caps = cfg.n_interests
+    emb = jnp.take(p["table"], hist, axis=0)              # (b, S, d)
+    low = emb @ p["s_mat"]                                # shared bilinear
+    valid = (jnp.arange(s)[None, :] < hist_len[:, None])
+    # fixed per-position routing-logit init (paper: random init, frozen);
+    # deterministic hash of position keeps serving reproducible
+    binit = jnp.sin(jnp.arange(s, dtype=jnp.float32)[:, None] *
+                    (1.0 + jnp.arange(k_caps, dtype=jnp.float32))[None])
+    blog = jnp.broadcast_to(binit[None], (b, s, k_caps))
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(blog, axis=-1)                 # over capsules
+        w = jnp.where(valid[..., None], w, 0.0)
+        z = jnp.einsum("bsk,bsd->bkd", w, low)
+        u = _squash(z)                                    # (b, K, d)
+        blog = blog + jnp.einsum("bkd,bsd->bsk", u, low)
+    return u
+
+
+def mind_fwd_train(p: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: RecSysConfig, offsets) -> jnp.ndarray:
+    """Sampled-softmax over in-batch negatives; label-aware attention."""
+    u = mind_user_interests(p, batch["hist"], batch["hist_len"], cfg)
+    tgt = jnp.take(p["table"], batch["target"], axis=0)   # (b, d)
+    # label-aware attention: weight interests by similarity^2 to target
+    att = jax.nn.softmax(
+        2.0 * jnp.einsum("bkd,bd->bk", u, tgt), axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, u)               # (b, d)
+    logits = user @ tgt.T                                 # in-batch
+    labels = jnp.arange(user.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def mind_score_candidates(p: Params, batch: Dict[str, jnp.ndarray],
+                          cfg: RecSysConfig, offsets,
+                          top_k: int = 100):
+    """retrieval_cand: 1 user x n candidates -> top-k (scores, ids).
+
+    Batched-dot over the candidate slab + max over interest capsules
+    (the paper's serving rule); no per-candidate loop.
+    """
+    u = mind_user_interests(p, batch["hist"], batch["hist_len"], cfg)
+    cand = jnp.take(p["table"], batch["candidates"], axis=0)  # (n, d)
+    cand = shard(cand, ("candidates", None))
+    scores = jnp.einsum("bkd,nd->bkn", u, cand)
+    best = scores.max(axis=1)                              # (b, n)
+    k_eff = min(top_k, best.shape[-1])
+    n = best.shape[-1]
+    n_shards = 256
+    if n % n_shards == 0 and n // n_shards >= k_eff:
+        # §Perf HC3: top-k over a sharded axis makes GSPMD all-gather
+        # the full score vector; reshaping to (shards, n/shards) keeps
+        # the first selection shard-local and the final merge touches
+        # only shards*k entries (the flash-style top-k merge from
+        # kernels/mips_topk applied at the model level).
+        b = best.shape[0]
+        blk = n // n_shards
+        best_r = shard(best.reshape(b, n_shards, blk),
+                       ("batch", "candidates", None))
+        v_loc, i_loc = jax.lax.top_k(best_r, k_eff)  # (b, S, k)
+        base = (jnp.arange(n_shards, dtype=jnp.int32) * blk)[None, :,
+                                                             None]
+        flat_v = v_loc.reshape(b, n_shards * k_eff)
+        flat_i = (i_loc + base).reshape(b, n_shards * k_eff)
+        vals, pos = jax.lax.top_k(flat_v, k_eff)
+        return vals, jnp.take_along_axis(flat_i, pos, axis=1)
+    vals, idx = jax.lax.top_k(best, k_eff)
+    return vals, idx
+
+
+# ---------------------------------------------------------------------------
+# unified entry points
+# ---------------------------------------------------------------------------
+_INIT = {"fm": deepfm_init, "cross": dcnv2_init, "augru": dien_init,
+         "multi-interest": mind_init}
+_FWD = {"fm": deepfm_fwd, "cross": dcnv2_fwd, "augru": dien_fwd}
+
+
+def init_params(cfg: RecSysConfig, key, dtype=jnp.float32):
+    return _INIT[cfg.interaction](cfg, key, dtype)
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray],
+            cfg: RecSysConfig, offsets) -> Tuple[jnp.ndarray, Dict]:
+    if cfg.interaction == "multi-interest":
+        loss = mind_fwd_train(params, batch, cfg, offsets)
+        return loss, {"nll": loss}
+    logit = _FWD[cfg.interaction](params, batch, cfg, offsets)
+    loss = bce_loss(logit, batch["labels"])
+    return loss, {"nll": loss}
+
+
+def serve_fn(params: Params, batch: Dict[str, jnp.ndarray],
+             cfg: RecSysConfig, offsets):
+    if cfg.interaction == "multi-interest":
+        if "candidates" in batch:
+            return mind_score_candidates(params, batch, cfg, offsets)
+        u = mind_user_interests(params, batch["hist"],
+                                batch["hist_len"], cfg)
+        tgt = jnp.take(params["table"], batch["target"], axis=0)
+        return jnp.einsum("bkd,bd->bk", u, tgt).max(axis=-1)
+    return jax.nn.sigmoid(
+        _FWD[cfg.interaction](params, batch, cfg, offsets))

@@ -1,0 +1,44 @@
+"""Activation-sharding context.
+
+Models call ``shard(x, ("batch", "seq", None))`` at layer boundaries.
+Outside a mesh context this is a no-op; launch code installs the mesh +
+logical rules so the same model code lowers with GSPMD constraints on
+the production mesh.  (MaxText's ``nn_partitioning`` pattern, without
+the flax dependency.)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.common.sharding import LogicalRules
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, LogicalRules]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: LogicalRules):
+    prev = _current()
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.spec(mesh, x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

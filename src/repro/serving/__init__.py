@@ -1,0 +1,5 @@
+"""Serving: batched decode engine + RAG pipeline."""
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.rag_pipeline import RAGPipeline
+
+__all__ = ["Engine", "EngineConfig", "RAGPipeline"]

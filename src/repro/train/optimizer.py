@@ -1,0 +1,221 @@
+"""AdamW + global-norm clipping + schedules (no optax dependency).
+
+Optimizer state mirrors the param tree (same logical axes => same
+sharding: ZeRO-style distributed optimizer falls out of the FSDP weight
+sharding for free).  Master weights and moments are fp32 regardless of
+the compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    mu: Any                    # first moment (param tree)
+    nu: Any                    # second moment (param tree)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, *,
+                 lr: jnp.ndarray | float, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0
+                 ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + \
+            weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step, mu, nu), {"grad_norm": gnorm}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern, arXiv:1804.04235)
+# Memory: ~0 optimizer state for matrices (row+col stats) — what makes
+# the 400B llama4 train cell fit 256 v5e chips (DESIGN.md §4).
+# ---------------------------------------------------------------------------
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any        # row second-moment (last dim reduced)
+    vc: Any        # col second-moment (second-to-last dim reduced)
+    v: Any         # full second moment for <2D params only
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def rows(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 \
+            else jnp.zeros((), jnp.float32)
+
+    def cols(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if p.ndim >= 2 else jnp.zeros((), jnp.float32)
+
+    def full(p):
+        return jnp.zeros(p.shape, jnp.float32) if p.ndim < 2 \
+            else jnp.zeros((), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(rows, params),
+        vc=jax.tree.map(cols, params),
+        v=jax.tree.map(full, params))
+
+
+def adafactor_update(params: Any, grads: Any, state: AdafactorState, *,
+                     lr: jnp.ndarray | float, decay: float = 0.8,
+                     eps: float = 1e-30, clip_threshold: float = 1.0,
+                     update_dtype=jnp.float32
+                     ) -> Tuple[Any, AdafactorState, Dict]:
+    """``update_dtype=bf16`` keeps the big per-leaf g/u temporaries in
+    bf16 (factored row/col stats stay fp32) — at 400B params the fp32
+    update temps alone are ~6 GB/device, the difference between fitting
+    v5e HBM and not.  Documented trade-off for the large-MoE policy."""
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, vr, vc, v):
+        if p.ndim >= 2:
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            # u = g / sqrt(outer(vr, vc) / mean(vr))
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            fac_r = jax.lax.rsqrt(jnp.maximum(r, eps)).astype(
+                update_dtype)
+            fac_c = jax.lax.rsqrt(jnp.maximum(vc, eps)).astype(
+                update_dtype)
+            u = g.astype(update_dtype) * fac_r[..., None] * \
+                fac_c[..., None, :]
+            rms = jnp.sqrt(jnp.mean(
+                u.astype(jnp.float32) ** 2) + eps)
+            u = u * (1.0 / jnp.maximum(
+                1.0, rms / clip_threshold)).astype(update_dtype)
+            newp = (p.astype(update_dtype) -
+                    jnp.asarray(lr, update_dtype) * u).astype(p.dtype)
+            return newp, vr, vc, v
+        g = g.astype(jnp.float32)
+        v = beta2 * v + (1 - beta2) * (g * g + eps)
+        u = g * jax.lax.rsqrt(v)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, vr, vc, v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_vr = jax.tree.leaves(state.vr)
+    flat_vc = jax.tree.leaves(state.vc)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, vr, vc, v) for p, g, vr, vc, v in
+           zip(flat_p, flat_g, flat_vr, flat_vc, flat_v)]
+    new_params = tree.unflatten([o[0] for o in out])
+    new_state = AdafactorState(
+        step=step,
+        vr=tree.unflatten([o[1] for o in out]),
+        vc=tree.unflatten([o[2] for o in out]),
+        v=tree.unflatten([o[3] for o in out]))
+    return new_params, new_state, {}
+
+
+def opt_init(params: Any, kind: str = "adamw"):
+    return adamw_init(params) if kind == "adamw" else \
+        adafactor_init(params)
+
+
+def opt_update(params, grads, state, *, lr, kind: str = "adamw",
+               update_dtype=jnp.float32):
+    if kind == "adamw":
+        return adamw_update(params, grads, state, lr=lr)
+    return adafactor_update(params, grads, state, lr=lr,
+                            update_dtype=update_dtype)
+
+
+def make_train_step(loss_fn: Callable, *, lr_schedule=None,
+                    base_lr: float = 3e-4, n_microbatches: int = 1,
+                    optimizer: str = "adamw",
+                    accum_dtype=jnp.float32):
+    """Generic pjit-able train step: (params, opt, batch) -> updated.
+
+    ``n_microbatches > 1``: gradient accumulation via lax.scan over
+    equal batch slices — bounds saved activations to one microbatch
+    (the remat carve that fits train_4k in v5e HBM; see EXPERIMENTS.md
+    §Perf) at the cost of re-running the fwd/bwd n times sequentially.
+    """
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // n_microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+            def body(acc, i):
+                mb = jax.tree.map(lambda x: slice_mb(i, x), batch)
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(accum_dtype), acc, g)
+                return acc, (l, m)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            gsum, (losses, ms) = jax.lax.scan(
+                body, zero, jnp.arange(n_microbatches))
+            grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        lr = lr_schedule(opt_state.step) if lr_schedule else base_lr
+        params, opt_state, om = opt_update(params, grads, opt_state,
+                                           lr=lr, kind=optimizer,
+                                           update_dtype=accum_dtype)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+    return train_step

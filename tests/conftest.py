@@ -1,0 +1,10 @@
+import os
+import sys
+
+# never let tests inherit dry-run device-count or unroll flags
+os.environ.pop("REPRO_UNROLL_SCANS", None)
+assert "--xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must run with the real (single) device count"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,154 @@
+"""EraGraph: build (Alg 1), incremental update (Alg 3), locality."""
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.graph import EraGraph
+from repro.data.chunker import Chunk
+from repro.data.corpus import SyntheticCorpus
+from repro.data.chunker import chunk_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.embed.hashing import HashingEmbedder
+
+CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
+                   max_layers=3, chunk_tokens=48)
+
+
+def make_graph(cfg=CFG):
+    return EraGraph(cfg, HashingEmbedder(dim=cfg.embed_dim))
+
+
+def corpus_chunks(n_docs=40, seed=0, cfg=CFG):
+    corpus = SyntheticCorpus.generate(n_docs=n_docs, n_topics=5,
+                                      seed=seed)
+    return corpus, chunk_corpus(corpus.docs, HashTokenizer(),
+                                cfg.chunk_tokens)
+
+
+def test_build_creates_hierarchy():
+    _, chunks = corpus_chunks()
+    g = make_graph()
+    rep = g.insert_chunks(chunks)
+    assert rep.n_new_chunks == len(chunks)
+    assert g.n_layers >= 2
+    sizes = [len(g.layer_order[l]) for l in range(g.n_layers)]
+    assert sizes[0] == len(chunks)
+    assert all(sizes[i] > sizes[i + 1] for i in range(len(sizes) - 1))
+    assert not g.check_integrity()
+
+
+def test_insert_idempotent():
+    _, chunks = corpus_chunks()
+    g = make_graph()
+    g.insert_chunks(chunks)
+    before = set(g.nodes)
+    rep = g.insert_chunks(chunks)  # same chunks again
+    assert rep.n_new_chunks == 0
+    assert set(g.nodes) == before
+
+
+def test_incremental_integrity_over_rounds():
+    corpus, _ = corpus_chunks(n_docs=50)
+    g = make_graph()
+    init, rounds = corpus.growth_rounds(0.5, 10)
+    g.insert_chunks(chunk_corpus(init, HashTokenizer(),
+                                 CFG.chunk_tokens))
+    assert not g.check_integrity()
+    for r in rounds:
+        g.insert_chunks(chunk_corpus(r, HashTokenizer(),
+                                     CFG.chunk_tokens))
+        errs = g.check_integrity()
+        assert not errs, errs[:5]
+
+
+def test_update_locality():
+    """Unaffected segments keep identity + summaries across an insert."""
+    corpus, chunks = corpus_chunks(n_docs=60)
+    g = make_graph()
+    init, rounds = corpus.growth_rounds(0.5, 10)
+    g.insert_chunks(chunk_corpus(init, HashTokenizer(),
+                                 CFG.chunk_tokens))
+    leaf_segs_before = {seg.parent: seg.members
+                        for seg in g.segments[0]}
+    n_before = len(leaf_segs_before)
+    rep = g.insert_chunks(chunk_corpus(rounds[0], HashTokenizer(),
+                                       CFG.chunk_tokens))
+    leaf_segs_after = {seg.parent: seg.members
+                       for seg in g.segments[0]}
+    surviving = set(leaf_segs_before) & set(leaf_segs_after)
+    # strictly local: most segments untouched
+    assert len(surviving) >= 0.5 * n_before
+    for p in surviving:
+        assert leaf_segs_before[p] == leaf_segs_after[p]
+    # and the update touched far fewer segments than a full rebuild
+    assert rep.n_resummarized < n_before + sum(
+        len(s) for s in g.segments[1:] if s)
+
+
+def test_update_cost_scales_with_delta_not_corpus():
+    """Thm 4 / paper Fig 6: single-entry insert touches O(delta)
+    segments, not O(|C|)."""
+    corpus, _ = corpus_chunks(n_docs=80)
+    tok = HashTokenizer()
+    g = make_graph()
+    docs = corpus.docs
+    big = chunk_corpus(docs[:-1], tok, CFG.chunk_tokens)
+    rep_full = g.insert_chunks(big)
+    rep_small = g.insert_chunks(chunk_corpus(docs[-1:], tok,
+                                             CFG.chunk_tokens))
+    # one document (~3 chunks): a constant number of resummaries per
+    # layer vs hundreds for the build
+    assert rep_small.n_resummarized <= \
+        4 * (rep_small.n_new_chunks + CFG.max_layers)
+    assert rep_small.n_resummarized < 0.2 * rep_full.n_resummarized
+    assert rep_small.tokens_total < 0.2 * rep_full.tokens_total
+
+
+def test_content_addressed_convergence():
+    """Re-inserting identical content converges without cascades."""
+    _, chunks = corpus_chunks()
+    g = make_graph()
+    g.insert_chunks(chunks)
+    v = g.version
+    nodes = dict(g.nodes)
+    g.insert_chunks(chunks)
+    assert set(g.nodes) == set(nodes)
+    assert g.version == v  # no new chunks -> no version bump
+
+
+def test_parent_child_consistency():
+    _, chunks = corpus_chunks()
+    g = make_graph()
+    g.insert_chunks(chunks)
+    for layer in range(g.n_layers - 1):
+        for seg in g.segments[layer]:
+            parent = g.nodes[seg.parent]
+            assert parent.layer == layer + 1
+            assert tuple(parent.children) == seg.members
+            for m in seg.members:
+                assert g.nodes[m].layer == layer
+
+
+def test_state_roundtrip_preserves_behaviour():
+    corpus, chunks = corpus_chunks()
+    g = make_graph()
+    g.insert_chunks(chunks[:60])
+    state = g.state_dict()
+    g2 = EraGraph.from_state(state, HashingEmbedder(dim=CFG.embed_dim))
+    assert set(g2.nodes) == set(g.nodes)
+    assert not g2.check_integrity()
+    # inserting the SAME next batch into both yields identical graphs
+    g.insert_chunks(chunks[60:])
+    g2.insert_chunks(chunks[60:])
+    assert set(g2.nodes) == set(g.nodes)
+    assert [len(s) for s in g.segments] == [len(s) for s in g2.segments]
+
+
+def test_segment_bounds_after_updates():
+    _, chunks = corpus_chunks(n_docs=70)
+    g = make_graph()
+    for i in range(0, len(chunks), 17):
+        g.insert_chunks(chunks[i:i + 17])
+    for layer, segs in enumerate(g.segments):
+        for seg in segs:
+            assert seg.size <= CFG.s_max, (layer, seg.size)

@@ -1,0 +1,192 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import chunked_attention, \
+    dense_decode_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hamming_topk.kernel import hamming_topk_pallas
+from repro.kernels.hamming_topk.ref import hamming_topk_ref
+from repro.kernels.lsh_hash.kernel import lsh_hash_pallas
+from repro.kernels.lsh_hash.ops import lsh_hash, unpack_bits
+from repro.kernels.lsh_hash.ref import lsh_hash_ref
+from repro.kernels.mips_topk.kernel import mips_topk_pallas
+from repro.kernels.mips_topk.ops import merge_sharded_topk
+from repro.kernels.mips_topk.ref import mips_topk_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# lsh_hash
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,k", [
+    (1, 8, 1), (7, 16, 12), (130, 256, 12), (256, 64, 32),
+    (100, 100, 45), (64, 512, 64), (33, 40, 96), (512, 128, 31),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_lsh_hash_matches_ref(n, d, k, dtype):
+    v = RNG.standard_normal((n, d)).astype(dtype)
+    h = RNG.standard_normal((d, k)).astype(np.float32)
+    ref = np.asarray(lsh_hash_ref(jnp.asarray(v, jnp.float32),
+                                  jnp.asarray(h)))
+    out = np.asarray(lsh_hash(jnp.asarray(v, jnp.float32),
+                              jnp.asarray(h), use_pallas=True,
+                              interpret=True))
+    assert np.array_equal(ref, out)
+
+
+def test_lsh_hash_block_sweep():
+    v = RNG.standard_normal((300, 120)).astype(np.float32)
+    h = RNG.standard_normal((120, 20)).astype(np.float32)
+    ref = np.asarray(lsh_hash_ref(jnp.asarray(v), jnp.asarray(h)))
+    for bn in (32, 128, 512):
+        for bd in (64, 128):
+            out = np.array(lsh_hash_pallas(
+                jnp.asarray(v), jnp.asarray(h), block_n=bn,
+                block_d=bd, interpret=True))  # writable copy
+            # mask tail bits like ops does
+            rem = 20 % 32
+            out[:, -1] &= np.uint32((1 << rem) - 1)
+            assert np.array_equal(ref, out), (bn, bd)
+
+
+def test_unpack_bits_roundtrip():
+    v = RNG.standard_normal((40, 32)).astype(np.float32)
+    h = RNG.standard_normal((32, 17)).astype(np.float32)
+    codes = lsh_hash(jnp.asarray(v), jnp.asarray(h))
+    bits = np.asarray(unpack_bits(codes, 17))
+    proj = v @ h
+    assert np.array_equal(bits, (proj >= 0).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# mips_topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n,d,k", [
+    (1, 10, 4, 1), (4, 100, 32, 5), (130, 1000, 256, 8),
+    (1, 513, 64, 16), (7, 50, 100, 50), (32, 2048, 128, 10),
+])
+def test_mips_topk_matches_ref(b, n, d, k):
+    q = RNG.standard_normal((b, d)).astype(np.float32)
+    db = RNG.standard_normal((n, d)).astype(np.float32)
+    rv, ri = mips_topk_ref(jnp.asarray(q), jnp.asarray(db), k)
+    pv, pi = mips_topk_pallas(jnp.asarray(q), jnp.asarray(db), k,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(pv),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(ri), np.asarray(pi))
+
+
+def test_mips_topk_ties_prefer_lower_index():
+    db = np.zeros((8, 4), np.float32)
+    db[:, 0] = 1.0  # all identical scores
+    q = np.ones((1, 4), np.float32)
+    _, ri = mips_topk_pallas(jnp.asarray(q), jnp.asarray(db), 3,
+                             interpret=True)
+    assert np.array_equal(np.asarray(ri)[0], [0, 1, 2])
+
+
+def test_merge_sharded_topk_equals_global():
+    q = RNG.standard_normal((6, 32)).astype(np.float32)
+    db = RNG.standard_normal((400, 32)).astype(np.float32)
+    k = 7
+    gv, gi = mips_topk_ref(jnp.asarray(q), jnp.asarray(db), k)
+    # shard DB into 4 pieces, per-shard top-k, then merge
+    shard_v, shard_i = [], []
+    for s in range(4):
+        lo, hi = s * 100, (s + 1) * 100
+        v, i = mips_topk_ref(jnp.asarray(q), jnp.asarray(db[lo:hi]), k)
+        shard_v.append(v)
+        shard_i.append(i + lo)
+    mv, mi = merge_sharded_topk(jnp.stack(shard_v), jnp.stack(shard_i),
+                                k)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(mv),
+                               rtol=1e-6)
+    assert np.array_equal(np.asarray(gi), np.asarray(mi))
+
+
+# ---------------------------------------------------------------------------
+# hamming_topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n,w,k", [
+    (1, 10, 1, 3), (4, 100, 1, 5), (64, 1000, 2, 8), (1, 513, 4, 16),
+    (9, 50, 3, 20),
+])
+def test_hamming_topk_matches_ref(b, n, w, k):
+    qc = RNG.integers(0, 2**32, size=(b, w), dtype=np.uint32)
+    dbc = RNG.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    rd, ri = hamming_topk_ref(jnp.asarray(qc), jnp.asarray(dbc), k)
+    pd, pi = hamming_topk_pallas(jnp.asarray(qc), jnp.asarray(dbc), k,
+                                 interpret=True)
+    assert np.array_equal(np.asarray(rd), np.asarray(pd))
+    assert np.array_equal(np.asarray(ri), np.asarray(pi))
+
+
+def test_hamming_exact_distance():
+    a = np.asarray([[0b1011]], dtype=np.uint32)
+    db = np.asarray([[0b1011], [0b0011], [0b0000]], dtype=np.uint32)
+    d, i = hamming_topk_ref(jnp.asarray(a), jnp.asarray(db), 3)
+    assert np.array_equal(np.asarray(d)[0], [0, 1, 3])
+    assert np.array_equal(np.asarray(i)[0], [0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,d,causal", [
+    (1, 4, 4, 64, 64, 16, False),
+    (2, 8, 2, 128, 128, 32, True),
+    (1, 4, 1, 1, 300, 64, True),
+    (2, 6, 3, 70, 70, 16, True),
+    (1, 2, 2, 33, 95, 8, False),
+    (1, 1, 1, 5, 5, 4, True),
+])
+def test_flash_attention_matches_ref(b, hq, hkv, lq, lk, d, causal):
+    q = RNG.standard_normal((b, hq, lq, d)).astype(np.float32)
+    k = RNG.standard_normal((b, hkv, lk, d)).astype(np.float32)
+    v = RNG.standard_normal((b, hkv, lk, d)).astype(np.float32)
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=causal)
+    pal = flash_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), causal=causal,
+                                 block_q=32, block_k=32,
+                                 interpret=True)
+    chk = chunked_attention(jnp.asarray(q), jnp.asarray(k),
+                            jnp.asarray(v), causal=causal, block_k=32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(chk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = RNG.standard_normal((2, 4, 32, 16)).astype(np.float32)
+    k = RNG.standard_normal((2, 2, 32, 16)).astype(np.float32)
+    v = RNG.standard_normal((2, 2, 32, 16)).astype(np.float32)
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=True)
+    pal = flash_attention_pallas(
+        jnp.asarray(q, jnp.bfloat16), jnp.asarray(k, jnp.bfloat16),
+        jnp.asarray(v, jnp.bfloat16), causal=True, block_q=16,
+        block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(ref),
+                               np.asarray(pal, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_dense_decode_matches_ref_with_kvlen():
+    b, hq, hkv, lk, d = 3, 8, 2, 64, 16
+    q = RNG.standard_normal((b, hq, 1, d)).astype(np.float32)
+    k = RNG.standard_normal((b, hkv, lk, d)).astype(np.float32)
+    v = RNG.standard_normal((b, hkv, lk, d)).astype(np.float32)
+    kvl = jnp.asarray([5, 64, 31], jnp.int32)
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        kv_len=kvl)
+    out = dense_decode_attention(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), kv_len=kvl)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,98 @@
+"""HyperplaneLSH: determinism, persistence, Theorem-1 behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import HyperplaneLSH
+
+
+def test_hash_deterministic_across_instances():
+    a = HyperplaneLSH(dim=32, n_hyperplanes=12, seed=7)
+    b = HyperplaneLSH(dim=32, n_hyperplanes=12, seed=7)
+    v = np.random.default_rng(0).standard_normal((50, 32)).astype(
+        np.float32)
+    assert np.array_equal(a.hash_packed(v), b.hash_packed(v))
+    assert np.array_equal(a.hash_ints(v), b.hash_ints(v))
+
+
+def test_different_seed_different_planes():
+    a = HyperplaneLSH(dim=16, n_hyperplanes=8, seed=0)
+    b = HyperplaneLSH(dim=16, n_hyperplanes=8, seed=1)
+    assert not np.allclose(a.hyperplanes, b.hyperplanes)
+
+
+def test_state_roundtrip():
+    a = HyperplaneLSH(dim=24, n_hyperplanes=20, seed=3)
+    b = HyperplaneLSH.from_state(a.state_dict())
+    v = np.random.default_rng(1).standard_normal((20, 24)).astype(
+        np.float32)
+    assert np.array_equal(a.hash_ints(v), b.hash_ints(v))
+
+
+def test_identical_vectors_collide():
+    lsh = HyperplaneLSH(dim=16, n_hyperplanes=16, seed=0)
+    v = np.random.default_rng(2).standard_normal((1, 16)).astype(
+        np.float32)
+    vs = np.repeat(v, 5, axis=0)
+    keys = lsh.hash_ints(vs)
+    assert len(set(keys.tolist())) == 1
+
+
+def test_theorem1_collision_probability_monte_carlo():
+    """P[same bit] = 1 - theta/pi for sign random projections."""
+    rng = np.random.default_rng(0)
+    dim = 64
+    n_planes = 4000
+    lsh = HyperplaneLSH(dim=dim, n_hyperplanes=1, seed=0)
+    for theta in (0.3, 0.9, 1.6, 2.5):
+        # construct two unit vectors at angle theta
+        a = np.zeros(dim, np.float32)
+        a[0] = 1.0
+        b = np.zeros(dim, np.float32)
+        b[0] = np.cos(theta)
+        b[1] = np.sin(theta)
+        planes = rng.standard_normal((n_planes, dim))
+        same = np.mean(np.sign(planes @ a) == np.sign(planes @ b))
+        expect = lsh.collision_probability(theta)
+        assert abs(same - expect) < 0.03, (theta, same, expect)
+
+
+def test_closer_vectors_share_more_bits():
+    lsh = HyperplaneLSH(dim=32, n_hyperplanes=32, seed=0)
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal(32).astype(np.float32)
+    base /= np.linalg.norm(base)
+    near = base + 0.1 * rng.standard_normal(32).astype(np.float32)
+    near /= np.linalg.norm(near)
+    far = rng.standard_normal(32).astype(np.float32)
+    far /= np.linalg.norm(far)
+    from repro.kernels.lsh_hash.ops import unpack_bits
+    import jax.numpy as jnp
+    codes = lsh.hash_packed(np.stack([base, near, far]))
+    bits = np.asarray(unpack_bits(jnp.asarray(codes), 32))
+    d_near = np.sum(bits[0] != bits[1])
+    d_far = np.sum(bits[0] != bits[2])
+    assert d_near < d_far
+
+
+@given(st.integers(min_value=1, max_value=80),
+       st.integers(min_value=1, max_value=70))
+@settings(max_examples=20, deadline=None)
+def test_hash_shape_properties(n, k):
+    lsh = HyperplaneLSH(dim=8, n_hyperplanes=k, seed=0)
+    v = np.random.default_rng(n).standard_normal((n, 8)).astype(
+        np.float32)
+    packed = lsh.hash_packed(v)
+    assert packed.shape == (n, -(-k // 32))
+    assert packed.dtype == np.uint32
+    # tail bits beyond k are zero
+    rem = k % 32
+    if rem:
+        tail = packed[:, -1] >> np.uint32(rem)
+        assert np.all(tail == 0)
+
+
+def test_bad_input_shape_raises():
+    lsh = HyperplaneLSH(dim=8, n_hyperplanes=4, seed=0)
+    with pytest.raises(ValueError):
+        lsh.hash_packed(np.zeros((3, 9), np.float32))

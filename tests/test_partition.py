@@ -1,0 +1,100 @@
+"""Property tests for the size-bounded partitioner (paper Alg 1 L7-11)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    choose_parts,
+    group_buckets,
+    make_runs,
+    partition_items,
+    segments_contiguous,
+    sort_items,
+    split_even,
+)
+
+
+def items_strategy():
+    return st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2**40),
+                  st.uuids().map(str)),
+        min_size=0, max_size=300, unique_by=lambda t: t[1])
+
+
+@given(items_strategy(),
+       st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=20))
+@settings(max_examples=200, deadline=None)
+def test_partition_invariants(items, s_min, extra):
+    s_max = s_min + extra
+    segs = partition_items(items, s_min, s_max)
+
+    # one-to-one: no item lost, none duplicated
+    flat = [it for seg in segs for it in seg]
+    assert sorted(i for _, i in flat) == sorted(i for _, i in items)
+
+    # hard upper bound
+    assert all(len(seg) <= s_max for seg in segs)
+
+    # order preservation (contiguous code ranges)
+    assert segments_contiguous(segs)
+
+    # lower bound where feasible: a run of n >= s_min items split into
+    # p = ceil(n/s_max) parts has all parts >= s_min whenever
+    # p <= floor(n/s_min)
+    buckets = group_buckets(list(items))
+    if buckets:
+        for run in make_runs(buckets, s_min):
+            n = len(run)
+            p = choose_parts(n, s_min, s_max)
+            if p <= n // s_min:
+                parts = split_even(run, p)
+                assert all(len(x) >= s_min for x in parts)
+
+
+@given(items_strategy(), st.integers(min_value=2, max_value=15))
+@settings(max_examples=100, deadline=None)
+def test_only_one_small_segment_allowed(items, s_min):
+    """At most the whole-layer-tiny case yields a segment < s_min when
+    bounds are wide (s_max = 2*s_min covers every feasible n)."""
+    s_max = 2 * s_min
+    segs = partition_items(items, s_min, s_max)
+    small = [s for s in segs if len(s) < s_min]
+    if len(items) >= s_min:
+        assert not small, (len(items), [len(s) for s in segs])
+    else:
+        assert len(segs) <= 1
+
+
+@given(items_strategy(), st.integers(min_value=1, max_value=12),
+       st.integers(min_value=0, max_value=12))
+@settings(max_examples=100, deadline=None)
+def test_partition_deterministic(items, s_min, extra):
+    s_max = s_min + extra
+    a = partition_items(items, s_min, s_max)
+    b = partition_items(list(reversed(items)), s_min, s_max)
+    assert a == b  # input order must not matter
+
+
+@given(st.integers(min_value=1, max_value=500),
+       st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=20))
+@settings(max_examples=200, deadline=None)
+def test_choose_parts_bounds(n, s_min, extra):
+    s_max = s_min + extra
+    p = choose_parts(n, s_min, s_max)
+    assert 1 <= p <= n
+    # even split into p parts never exceeds s_max
+    assert -(-n // p) <= s_max or n <= s_max
+
+
+def test_split_even_exact():
+    run = [(i, str(i)) for i in range(10)]
+    parts = split_even(run, 3)
+    assert [len(p) for p in parts] == [4, 3, 3]
+    assert [it for p in parts for it in p] == run
+
+
+def test_bucket_grouping():
+    items = [(5, "a"), (1, "b"), (5, "c"), (2, "d")]
+    buckets = group_buckets(items)
+    assert [[i for _, i in b] for b in buckets] == [["b"], ["d"],
+                                                    ["a", "c"]]

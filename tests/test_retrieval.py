@@ -1,0 +1,85 @@
+"""Retrieval: collapsed search, adaptive p-split, token budget, store."""
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.erarag import EraRAG
+from repro.core.retrieve import adaptive_search, collapsed_search
+from repro.core.store import VectorStore
+from repro.data.corpus import SyntheticCorpus
+from repro.embed.hashing import HashingEmbedder
+
+CFG = EraRAGConfig(embed_dim=128, n_hyperplanes=10, s_min=3, s_max=9,
+                   max_layers=3, chunk_tokens=32, top_k=8,
+                   token_budget=1024)
+
+
+@pytest.fixture(scope="module")
+def rag():
+    corpus = SyntheticCorpus.generate(n_docs=40, n_topics=5, seed=0)
+    r = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
+    r.insert_docs(corpus.docs)
+    return r, corpus
+
+
+def test_store_matches_bruteforce(rag):
+    r, _ = rag
+    ids, embs, _ = r.graph.all_embeddings()
+    q = r.embedder.encode(["What is the capital of something?"])[0]
+    hits = r.store.search(q, 5)
+    scores = embs @ q
+    top = np.argsort(-scores, kind="stable")[:5]
+    assert [h.node_id for h in hits] == [ids[i] for i in top]
+
+
+def test_collapsed_search_includes_summaries(rag):
+    r, corpus = rag
+    res = r.query(f"Name an entity described in the context of "
+                  f"{corpus.topics[0]}.")
+    assert res.hits
+    assert res.n_tokens <= CFG.token_budget
+
+
+def test_token_budget_respected(rag):
+    r, corpus = rag
+    small = EraRAGConfig(**{**CFG.__dict__, "token_budget": 64})
+    q = r.embedder.encode([corpus.qa[0].question])[0]
+    res = collapsed_search(r.graph, r.store, q, 8, 64, r.tokenizer)
+    assert res.n_tokens <= 64 or len(res.hits) == 1
+
+
+def test_adaptive_detailed_prefers_leaves(rag):
+    r, corpus = rag
+    q = r.embedder.encode([corpus.qa[0].question])[0]
+    res = adaptive_search(r.graph, r.store, q, 8, 4096, p=1.0,
+                          mode="detailed", tokenizer=r.tokenizer)
+    assert all(h.layer == 0 for h in res.hits)
+    res_s = adaptive_search(r.graph, r.store, q, 8, 4096, p=1.0,
+                            mode="summarized", tokenizer=r.tokenizer)
+    assert all(h.layer > 0 for h in res_s.hits)
+
+
+def test_adaptive_p_split_counts(rag):
+    r, corpus = rag
+    q = r.embedder.encode([corpus.qa[0].question])[0]
+    res = adaptive_search(r.graph, r.store, q, 8, 10**9, p=0.5,
+                          mode="detailed", tokenizer=r.tokenizer)
+    leaves = sum(1 for h in res.hits if h.layer == 0)
+    summaries = sum(1 for h in res.hits if h.layer > 0)
+    assert leaves == 4 and summaries == 4
+
+
+def test_detailed_retrieval_quality(rag):
+    r, corpus = rag
+    detailed = [qa for qa in corpus.qa if qa.kind == "detailed"][:60]
+    hit = sum(qa.answer in r.query(qa.question).context
+              for qa in detailed)
+    assert hit / len(detailed) > 0.5, f"containment {hit}/{len(detailed)}"
+
+
+def test_bad_mode_raises(rag):
+    r, _ = rag
+    q = np.zeros(CFG.embed_dim, np.float32)
+    with pytest.raises(ValueError):
+        adaptive_search(r.graph, r.store, q, 4, 100, p=0.5,
+                        mode="nonsense")
