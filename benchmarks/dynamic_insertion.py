@@ -23,18 +23,34 @@ def run(n_docs: int = 80,
         init, rounds = corpus.growth_rounds(0.5, 10)
         dt0, _ = timed_call(sys_.insert_docs, init)
         tok0 = sys_.total_tokens
+        store = getattr(sys_, "store", None)
+        staged0 = 0
+        if store is not None and hasattr(store, "refresh"):
+            store.refresh()  # initial index build, not an update cost
+            staged0 = store.stats.rows_staged
         upd_tokens = 0
         upd_time = 0.0
+        refresh_time = 0.0
         for r in rounds:
             dt, rep = timed_call(sys_.insert_docs, r)
             upd_tokens += rep.tokens_total
             upd_time += rep.time_total
+            if store is not None and hasattr(store, "refresh"):
+                dt_r, _ = timed_call(store.refresh)
+                refresh_time += dt_r
         totals[name] = (upd_tokens, upd_time)
+        extra = ""
+        if store is not None and hasattr(store, "stats"):
+            s = store.stats
+            extra = (f";index_refresh_s={refresh_time:.3f}"
+                     f";index_rows_staged={s.rows_staged - staged0}"
+                     f";index_full_rebuilds={s.full_rebuilds}"
+                     f";index_compactions={s.compactions}")
         rows.append(csv_row(
             f"dynamic_insertion/{name}",
             1e6 * upd_time / max(1, len(rounds)),
             f"init_tokens={tok0};update_tokens={upd_tokens};"
-            f"update_time_s={upd_time:.2f}"))
+            f"update_time_s={upd_time:.2f}" + extra))
     if "erarag" in totals and "raptor" in totals:
         era_t, era_s = totals["erarag"]
         r_t, r_s = totals["raptor"]

@@ -1,0 +1,58 @@
+"""Batched-retrieval throughput: one kernel launch per query block.
+
+Measures ``EraRAG.query_batch`` against the per-query loop it replaces,
+at several batch sizes, over a built graph.  The batched path issues a
+single ``mips_topk`` launch for the whole (B, d) query block (two for
+adaptive search), so throughput should scale with B until the scan is
+compute-bound.  Also verifies that batched hits match the per-query
+loop — the parity the serving engine relies on.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row
+
+
+def _qps(fn, n_queries: int, repeats: int = 3) -> float:
+    fn()  # warm up (jit/compile)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return n_queries / max(best, 1e-9)
+
+
+def run(n_docs: int = 60, batch_sizes=(1, 8, 32)) -> List[str]:
+    corpus = bench_corpus(n_docs=n_docs)
+    rag = SYSTEMS["erarag"]()
+    rag.insert_docs(corpus.docs)
+    rag.store.refresh()
+    questions = [qa.question for qa in corpus.qa]
+    rows: List[str] = []
+    for bs in batch_sizes:
+        block = (questions * ((bs // max(1, len(questions))) + 1))[:bs]
+        loop_qps = _qps(lambda: [rag.query(q) for q in block], bs)
+        batch_qps = _qps(lambda: rag.query_batch(block), bs)
+        rows.append(csv_row(
+            f"query_batch/b{bs}", 1e6 * bs / batch_qps,
+            f"batch_qps={batch_qps:.1f};loop_qps={loop_qps:.1f};"
+            f"speedup={batch_qps / max(loop_qps, 1e-9):.2f}x"))
+    # parity: batched hits == per-query loop hits
+    block = questions[:8]
+    batched = rag.query_batch(block)
+    looped = [rag.query(q) for q in block]
+    mismatch = sum(
+        [h.node_id for h in a.hits] != [h.node_id for h in b.hits]
+        for a, b in zip(batched, looped))
+    rows.append(csv_row("query_batch/parity", 0.0,
+                        f"mismatches={mismatch}_of_{len(block)}"))
+    assert mismatch == 0, f"batched != looped on {mismatch} queries"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,7 +1,10 @@
 """Benchmark driver: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
-stderr).  ``python -m benchmarks.run [--fast] [--only NAME]``.
+stderr).  ``python -m benchmarks.run [--fast|--smoke] [--only NAME]``.
+``--smoke`` runs tiny corpora and skips the hardware-bound suites
+(kernel_bench, roofline) — a seconds-scale end-to-end exercise of every
+harness code path, suitable for CI and exercised by the test suite.
 """
 from __future__ import annotations
 
@@ -10,19 +13,14 @@ import sys
 import traceback
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=None)
-    ap.add_argument("--fast", action="store_true",
-                    help="smaller corpora for CI-speed runs")
-    args = ap.parse_args()
-
+def build_suites(n: int, smoke: bool = False) -> dict:
     from benchmarks import (
         chunk_size,
         dynamic_insertion,
         incremental_quality,
         initial_coverage,
         kernel_bench,
+        query_batch,
         roofline,
         segment_size,
         small_update,
@@ -30,21 +28,46 @@ def main() -> None:
         update_breakdown,
     )
 
-    n = 40 if args.fast else 80
+    half = max(40, n // 2)
     suites = {
         "static_qa": lambda: static_qa.run(n_docs=n),
         "dynamic_insertion": lambda: dynamic_insertion.run(n_docs=n),
         "incremental_quality": lambda: incremental_quality.run(
             n_docs=n),
         "small_update": lambda: small_update.run(n_docs=n),
-        "initial_coverage": lambda: initial_coverage.run(
-            n_docs=max(40, n // 2)),
-        "segment_size": lambda: segment_size.run(n_docs=max(40, n // 2)),
+        "initial_coverage": lambda: initial_coverage.run(n_docs=half),
+        "segment_size": lambda: segment_size.run(n_docs=half),
         "update_breakdown": lambda: update_breakdown.run(n_docs=n),
-        "chunk_size": lambda: chunk_size.run(n_docs=max(40, n // 2)),
+        "chunk_size": lambda: chunk_size.run(n_docs=half),
+        "query_batch": lambda: query_batch.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
+    if smoke:
+        # hardware-bound suites are meaningless at smoke scale (and
+        # dominate wall time on CPU interpret mode)
+        suites.pop("kernel_bench")
+        suites.pop("roofline")
+        suites["query_batch"] = lambda: query_batch.run(
+            n_docs=24, batch_sizes=(1, 8))
+    return suites
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora for CI-speed runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpora, skip hardware-bound suites")
+    args = ap.parse_args(argv)
+
+    n = 24 if args.smoke else (40 if args.fast else 80)
+    suites = build_suites(n, smoke=args.smoke)
+    if args.only and args.only not in suites:
+        raise SystemExit(
+            f"unknown suite {args.only!r}; available: "
+            f"{', '.join(suites)}")
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites.items():

@@ -16,13 +16,25 @@ from benchmarks.common import SYSTEMS, bench_corpus, csv_row, \
     timed_call
 
 
-def _single_entry_cost(name: str, n_docs: int) -> Tuple[int, float]:
+def _single_entry_cost(name: str, n_docs: int
+                       ) -> Tuple[int, float, str]:
     corpus = bench_corpus(n_docs=n_docs)
     sys_ = SYSTEMS[name]()
     init, rest = corpus.split(0.5)
     sys_.insert_docs(init)
+    store = getattr(sys_, "store", None)
+    if store is not None and hasattr(store, "refresh"):
+        store.refresh()  # build the index before timing the delta
     dt, rep = timed_call(sys_.insert_docs, rest[:1])
-    return rep.tokens_total, dt
+    extra = ""
+    if store is not None and hasattr(store, "stats"):
+        staged0 = store.stats.rows_staged
+        dt_r, _ = timed_call(store.refresh)
+        staged = store.stats.rows_staged - staged0
+        extra = (f";index_refresh_us={1e6 * dt_r:.1f}"
+                 f";index_rows_staged={staged}"
+                 f";index_size={store.size}")
+    return rep.tokens_total, dt, extra
 
 
 def run(n_docs: int = 80,
@@ -32,11 +44,11 @@ def run(n_docs: int = 80,
     cost: Dict[Tuple[str, int], int] = {}
     for name in systems:
         for n in scales:
-            tokens, dt = _single_entry_cost(name, n)
+            tokens, dt, extra = _single_entry_cost(name, n)
             cost[(name, n)] = tokens
             rows.append(csv_row(
                 f"small_update/{name}_n{n}", 1e6 * dt,
-                f"tokens={tokens}"))
+                f"tokens={tokens}" + extra))
 
     lo, hi = scales
     era_growth = cost[("erarag", hi)] / max(1, cost[("erarag", lo)])

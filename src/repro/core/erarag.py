@@ -15,8 +15,8 @@ import numpy as np
 
 from repro.common.config import EraRAGConfig
 from repro.core.graph import EraGraph, UpdateReport
-from repro.core.retrieve import Retrieval, adaptive_search, \
-    collapsed_search
+from repro.core.retrieve import Retrieval, adaptive_search_batch, \
+    collapsed_search_batch
 from repro.core.store import VectorStore
 from repro.core.summarize import Summarizer
 from repro.data.chunker import chunk_corpus
@@ -44,16 +44,26 @@ class EraRAG:
     def query(self, text: str, k: Optional[int] = None,
               mode: str = "collapsed") -> Retrieval:
         """mode: collapsed | detailed | summarized."""
+        return self.query_batch([text], k=k, mode=mode)[0]
+
+    def query_batch(self, texts: Sequence[str],
+                    k: Optional[int] = None,
+                    mode: str = "collapsed") -> List[Retrieval]:
+        """Batched retrieval: one embedder call + one store scan per
+        kernel launch for the whole query block.  ``query`` is the B=1
+        special case, so results match a per-query loop exactly."""
         k = k or self.cfg.top_k
-        q = self.embedder.encode([text])[0]
+        if not texts:
+            return []
+        q = np.asarray(self.embedder.encode(list(texts)))
         if mode == "collapsed":
-            return collapsed_search(self.graph, self.store, q, k,
-                                    self.cfg.token_budget,
-                                    self.tokenizer)
-        return adaptive_search(self.graph, self.store, q, k,
-                               self.cfg.token_budget,
-                               self.cfg.retrieval_bias_p, mode,
-                               self.tokenizer)
+            return collapsed_search_batch(self.graph, self.store, q, k,
+                                          self.cfg.token_budget,
+                                          self.tokenizer)
+        return adaptive_search_batch(self.graph, self.store, q, k,
+                                     self.cfg.token_budget,
+                                     self.cfg.retrieval_bias_p, mode,
+                                     self.tokenizer)
 
     # ------------------------------------------------------------------
     @property

@@ -113,6 +113,17 @@ class EraGraph:
         self.segments: List[List[Segment]] = []
         self.member_seg: List[Dict[str, Segment]] = []
         self.version = 0
+        # per-version (added_ids, removed_ids) deltas consumed by the
+        # vector store for O(delta) index maintenance; added ids are
+        # logged in node-creation order so the store's row order tracks
+        # the ``nodes`` dict insertion order exactly (tie-breaking in
+        # top-k then matches a from-scratch rebuild).
+        self._delta_log: Dict[int, Tuple[Tuple[str, ...],
+                                         Tuple[str, ...]]] = \
+            {0: ((), ())}
+        self._delta_keep = 512
+        self._pending_added: List[str] = []
+        self._pending_removed: List[str] = []
 
     # ------------------------------------------------------------------
     # public API
@@ -148,6 +159,7 @@ class EraGraph:
                         key=int(k), doc_id=c.doc_id,
                         n_tokens=c.n_tokens)
             self.nodes[node.node_id] = node
+            self._pending_added.append(node.node_id)
             added.append(node.node_id)
 
         removed: List[str] = []
@@ -158,7 +170,39 @@ class EraGraph:
             report.merge(rep)
             layer += 1
         self.version += 1
+        self._log_delta()
         return report
+
+    # ------------------------------------------------------------------
+    # delta log (vector-store index maintenance)
+    # ------------------------------------------------------------------
+    def _log_delta(self) -> None:
+        """Coalesce this update's node churn into the per-version log."""
+        added = tuple(n for n in dict.fromkeys(self._pending_added)
+                      if n in self.nodes)
+        removed = tuple(n for n in dict.fromkeys(self._pending_removed)
+                        if n not in self.nodes)
+        self._pending_added = []
+        self._pending_removed = []
+        self._delta_log[self.version] = (added, removed)
+        while len(self._delta_log) > self._delta_keep:
+            del self._delta_log[min(self._delta_log)]
+
+    def deltas_since(self, version: int
+                     ) -> Optional[List[Tuple[Tuple[str, ...],
+                                              Tuple[str, ...]]]]:
+        """(added, removed) per version in ``(version, self.version]``.
+
+        Returns ``None`` when the log no longer covers that span (store
+        older than the trimmed window, or a graph restored via
+        ``from_state``) — callers must fall back to a full rebuild.
+        """
+        if version >= self.version:
+            return []
+        span = range(version + 1, self.version + 1)
+        if any(v not in self._delta_log for v in span):
+            return None
+        return [self._delta_log[v] for v in span]
 
     # ------------------------------------------------------------------
     # layer update machinery
@@ -189,6 +233,8 @@ class EraGraph:
         report.time_hash += time.perf_counter() - t0
 
         nid = _node_id(layer + 1, members, res.text)
+        if nid not in self.nodes:
+            self._pending_added.append(nid)
         self.nodes[nid] = Node(node_id=nid, layer=layer + 1,
                                text=res.text, embedding=emb, key=key,
                                children=tuple(members),
@@ -314,6 +360,7 @@ class EraGraph:
         # original node; children were adopted by the new summary node)
         for nid in removed_parents:
             self.nodes.pop(nid, None)
+            self._pending_removed.append(nid)
         return added_parents, removed_parents, report
 
     def _merge_intervals(self, regions: List[Tuple[int, int]]

@@ -5,11 +5,18 @@ flat retrieval space; adaptive search splits the budget ``k`` into a
 ``p`` fraction taken from the preferred granularity and the remainder
 from the other (paper §III.D).  Both enforce the token budget ``T`` by
 greedy truncation of the score-ordered candidates.
+
+Every search comes in a batched variant (``*_search_batch``) that
+serves a whole ``(B, d)`` query block with one ``mips_topk`` launch per
+store scan; the single-query functions are the B=1 special case, so
+batched and looped results are identical by construction.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.store import Hit, VectorStore
 from repro.data.tokenizer import HashTokenizer
@@ -41,13 +48,51 @@ def _budgeted(graph, hits: Sequence[Hit], budget: int,
                      n_tokens=total)
 
 
+def collapsed_search_batch(graph, store: VectorStore, query_embs,
+                           k: int, token_budget: int,
+                           tokenizer: Optional[HashTokenizer] = None
+                           ) -> List[Retrieval]:
+    tok = tokenizer or HashTokenizer()
+    hits_b = store.search_batch(np.asarray(query_embs), k)
+    return [_budgeted(graph, hits, token_budget, tok)
+            for hits in hits_b]
+
+
 def collapsed_search(graph, store: VectorStore, query_emb, k: int,
                      token_budget: int,
                      tokenizer: Optional[HashTokenizer] = None
                      ) -> Retrieval:
+    return collapsed_search_batch(
+        graph, store, np.asarray(query_emb)[None, :], k, token_budget,
+        tokenizer)[0]
+
+
+def adaptive_search_batch(graph, store: VectorStore, query_embs,
+                          k: int, token_budget: int, p: float,
+                          mode: str = "detailed",
+                          tokenizer: Optional[HashTokenizer] = None
+                          ) -> List[Retrieval]:
+    """mode='detailed': top-pk from leaves + top-(k-pk) from summaries;
+    mode='summarized': the reverse (paper §III.D)."""
+    if mode not in ("detailed", "summarized"):
+        raise ValueError(mode)
     tok = tokenizer or HashTokenizer()
-    hits = store.search(query_emb, k)
-    return _budgeted(graph, hits, token_budget, tok)
+    q = np.asarray(query_embs)
+    n_q = q.shape[0]
+    k_primary = max(0, min(k, int(round(p * k))))
+    k_rest = k - k_primary
+    primary = "leaf" if mode == "detailed" else "summary"
+    secondary = "summary" if mode == "detailed" else "leaf"
+    prim_b = store.search_batch(q, k_primary, layer_filter=primary) \
+        if k_primary else [[] for _ in range(n_q)]
+    rest_b = store.search_batch(q, k_rest, layer_filter=secondary) \
+        if k_rest else [[] for _ in range(n_q)]
+    out: List[Retrieval] = []
+    for prim, rest in zip(prim_b, rest_b):
+        hits = prim + rest
+        hits.sort(key=lambda h: -h.score)
+        out.append(_budgeted(graph, hits, token_budget, tok))
+    return out
 
 
 def adaptive_search(graph, store: VectorStore, query_emb, k: int,
@@ -55,18 +100,6 @@ def adaptive_search(graph, store: VectorStore, query_emb, k: int,
                     mode: str = "detailed",
                     tokenizer: Optional[HashTokenizer] = None
                     ) -> Retrieval:
-    """mode='detailed': top-pk from leaves + top-(k-pk) from summaries;
-    mode='summarized': the reverse (paper §III.D)."""
-    if mode not in ("detailed", "summarized"):
-        raise ValueError(mode)
-    tok = tokenizer or HashTokenizer()
-    k_primary = max(0, min(k, int(round(p * k))))
-    k_rest = k - k_primary
-    primary = "leaf" if mode == "detailed" else "summary"
-    secondary = "summary" if mode == "detailed" else "leaf"
-    hits = store.search(query_emb, k_primary, layer_filter=primary) \
-        if k_primary else []
-    hits += store.search(query_emb, k_rest, layer_filter=secondary) \
-        if k_rest else []
-    hits.sort(key=lambda h: -h.score)
-    return _budgeted(graph, hits, token_budget, tok)
+    return adaptive_search_batch(
+        graph, store, np.asarray(query_emb)[None, :], k, token_budget,
+        p, mode, tokenizer)[0]

@@ -1,21 +1,42 @@
-"""Flat vector store over all graph nodes (collapsed index, §III.D).
+"""Incremental, batched, device-resident flat index (collapsed §III.D).
 
 Mirrors the FAISS IndexFlat role in the paper, implemented on the
-``mips_topk`` kernel.  The store tracks the graph version and rebuilds
-its matrix lazily after updates; production sharding splits the row set
-over the ``data`` mesh axis with a per-shard kernel scan + tiny top-k
-merge collective (see kernels/mips_topk/ops.merge_sharded_topk and
+``mips_topk`` kernel, but maintained *incrementally*: instead of
+re-stacking every embedding after each graph version bump (O(N) host
+work per insert), the store consumes the graph's per-version
+``(added_ids, removed_ids)`` deltas — new rows are appended into a
+preallocated, geometrically-grown device buffer and removed rows are
+tombstoned in place.  Tombstones are masked at query time through the
+buffer's trailing indicator columns (``[emb | dead | summary | leaf]``)
+plus a per-query bias vector (``flagged_mips_topk``), which also serves
+layer filtering without any host-side row gathering.  When tombstones
+exceed ``compact_threshold`` of the buffer the store compacts with one
+on-device gather, preserving row order so top-k tie-breaking stays
+bitwise-identical to a from-scratch rebuild.
+
+Queries are batched end-to-end: ``search_batch`` issues ONE
+``mips_topk`` launch for a ``(B, d)`` query block; ``search`` is the
+B=1 special case.  ``stats`` counts refreshes, staged rows, tombstones
+and compactions so tests and benchmarks can assert the O(delta)
+maintenance claim.  Production sharding splits the row set over the
+``data`` mesh axis with a per-shard kernel scan + tiny top-k merge
+collective (see kernels/mips_topk/ops.merge_sharded_topk and
 launch/dryrun.py's retrieval cell).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mips_topk.ops import mips_topk
+from repro.kernels.mips_topk.ops import MASK_BIAS, flagged_mips_topk
+
+# trailing indicator columns of the device buffer
+N_FLAGS = 3
+_DEAD, _SUMMARY, _LEAF = 0, 1, 2
 
 
 @dataclass
@@ -25,50 +46,225 @@ class Hit:
     layer: int
 
 
+@dataclass
+class StoreStats:
+    """Instrumented refresh counters (O(delta) maintenance evidence)."""
+
+    refreshes: int = 0
+    full_rebuilds: int = 0
+    rows_staged: int = 0       # host rows uploaded to the device buffer
+    rows_tombstoned: int = 0
+    compactions: int = 0
+    rows_compacted: int = 0
+    growths: int = 0
+
+
 class VectorStore:
-    def __init__(self, graph):
+    def __init__(self, graph, *, compact_threshold: float = 0.25,
+                 min_capacity: int = 64):
         self._graph = graph
-        self._version = -1
-        self._ids: List[str] = []
-        self._embs: Optional[np.ndarray] = None
-        self._layers: Optional[np.ndarray] = None
+        self._version = -1          # graph version the index reflects
+        self._compact_threshold = float(compact_threshold)
+        self._min_capacity = int(min_capacity)
+        self.stats = StoreStats()
+        self._reset_empty()
+
+    # ------------------------------------------------------------------
+    # buffer maintenance
+    # ------------------------------------------------------------------
+    def _reset_empty(self) -> None:
+        self._dim = self._graph.cfg.embed_dim
+        self._capacity = 0
+        self._count = 0             # rows in use, tombstones included
+        self._n_dead = 0
+        self._buf: Optional[jnp.ndarray] = None  # (cap, d + N_FLAGS)
+        self._row_ids: List[str] = []            # row -> node id
+        self._row_layers = np.zeros((0,), np.int32)   # (cap,)
+        self._alive = np.zeros((0,), bool)            # (cap,)
+        self._row_of: Dict[str, int] = {}
+        self._n_alive = {"leaf": 0, "summary": 0}
+
+    def _ensure_capacity(self, extra: int) -> None:
+        need = self._count + extra
+        if need <= self._capacity:
+            return
+        cap = max(self._min_capacity, self._capacity)
+        while cap < need:
+            cap *= 2
+        pad_rows = cap - self._capacity
+        d = self._dim
+        # unused capacity rows carry the dead flag so the kernel can
+        # scan the full buffer with stable shapes between growths
+        pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
+            .at[:, d + _DEAD].set(1.0)
+        self._buf = pad if self._buf is None \
+            else jnp.concatenate([self._buf, pad], axis=0)
+        self._row_layers = np.concatenate(
+            [self._row_layers, np.zeros((pad_rows,), np.int32)])
+        self._alive = np.concatenate(
+            [self._alive, np.zeros((pad_rows,), bool)])
+        self._capacity = cap
+        self.stats.growths += 1
+
+    def _append(self, ids: Sequence[str]) -> None:
+        """Stage ``len(ids)`` new rows — the only host->device copy on
+        the incremental path, O(delta) not O(N)."""
+        if not ids:
+            return
+        nodes = self._graph.nodes
+        m = len(ids)
+        d = self._dim
+        self._ensure_capacity(m)
+        block = np.zeros((m, d + N_FLAGS), np.float32)
+        for j, nid in enumerate(ids):
+            node = nodes[nid]
+            block[j, :d] = node.embedding
+            cls = "summary" if node.layer > 0 else "leaf"
+            block[j, d + (_SUMMARY if node.layer > 0 else _LEAF)] = 1.0
+            row = self._count + j
+            self._row_ids.append(nid)
+            self._row_layers[row] = node.layer
+            self._alive[row] = True
+            self._row_of[nid] = row
+            self._n_alive[cls] += 1
+        self._buf = jax.lax.dynamic_update_slice(
+            self._buf, jnp.asarray(block), (self._count, 0))
+        self._count += m
+        self.stats.rows_staged += m
+
+    def _tombstone(self, ids: Sequence[str]) -> None:
+        rows = []
+        for nid in ids:
+            row = self._row_of.pop(nid, None)
+            if row is None or not self._alive[row]:
+                continue
+            self._alive[row] = False
+            cls = "summary" if self._row_layers[row] > 0 else "leaf"
+            self._n_alive[cls] -= 1
+            rows.append(row)
+        if rows:
+            idx = jnp.asarray(np.asarray(rows, np.int32))
+            self._buf = self._buf.at[idx, self._dim + _DEAD].set(1.0)
+            self._n_dead += len(rows)
+            self.stats.rows_tombstoned += len(rows)
+
+    def _apply_delta(self, added: Sequence[str],
+                     removed: Sequence[str]) -> None:
+        self._tombstone(removed)
+        # a re-added id (content-addressed resurrection) must move to
+        # the buffer tail so row order keeps tracking the graph's node
+        # insertion order (exact tie-break parity with a rebuild)
+        stale = [nid for nid in added if nid in self._row_of]
+        if stale:
+            self._tombstone(stale)
+        self._append([nid for nid in added if nid in self._graph.nodes])
+
+    def _compact(self) -> None:
+        """Drop tombstoned rows with one on-device gather, preserving
+        the relative order of live rows."""
+        keep = np.nonzero(self._alive[:self._count])[0]
+        n = len(keep)
+        d = self._dim
+        gathered = jnp.take(self._buf, jnp.asarray(keep, jnp.int32),
+                            axis=0)
+        pad_rows = self._capacity - n
+        if pad_rows:
+            pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
+                .at[:, d + _DEAD].set(1.0)
+            self._buf = jnp.concatenate([gathered, pad], axis=0)
+        else:
+            self._buf = gathered
+        self._row_ids = [self._row_ids[i] for i in keep]
+        layers = np.zeros((self._capacity,), np.int32)
+        layers[:n] = self._row_layers[keep]
+        self._row_layers = layers
+        alive = np.zeros((self._capacity,), bool)
+        alive[:n] = True
+        self._alive = alive
+        self._row_of = {nid: i for i, nid in enumerate(self._row_ids)}
+        self._count = n
+        self._n_dead = 0
+        self.stats.compactions += 1
+        self.stats.rows_compacted += n
+
+    def _full_rebuild(self) -> None:
+        self._reset_empty()
+        self.stats.full_rebuilds += 1
+        self._append(list(self._graph.nodes))
 
     def _refresh(self) -> None:
-        if self._version == self._graph.version:
+        g = self._graph
+        if self._version == g.version:
             return
-        self._ids, self._embs, self._layers = \
-            self._graph.all_embeddings()
+        self.stats.refreshes += 1
+        deltas = g.deltas_since(self._version) \
+            if hasattr(g, "deltas_since") else None
+        if deltas is None:
+            self._full_rebuild()
+        else:
+            for added, removed in deltas:
+                self._apply_delta(added, removed)
+        if self._count and \
+                self._n_dead > self._compact_threshold * self._count:
+            self._compact()
+        self._version = g.version
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def refresh(self) -> None:
+        """Bring the index up to the graph's version (delta replay)."""
+        self._refresh()
+
+    def rebuild(self) -> None:
+        """Force a from-scratch re-stack (tests/benchmarks baseline)."""
+        self._full_rebuild()
         self._version = self._graph.version
 
     @property
     def size(self) -> int:
         self._refresh()
-        return len(self._ids)
+        return self._count - self._n_dead
+
+    def _valid_count(self, layer_filter: Optional[str]) -> int:
+        if layer_filter == "leaf":
+            return self._n_alive["leaf"]
+        if layer_filter == "summary":
+            return self._n_alive["summary"]
+        return self._n_alive["leaf"] + self._n_alive["summary"]
 
     def search(self, query: np.ndarray, k: int,
                layer_filter: Optional[str] = None) -> List[Hit]:
         """layer_filter: None (all) | 'leaf' | 'summary'."""
+        return self.search_batch(np.asarray(query)[None, :], k,
+                                 layer_filter)[0]
+
+    def search_batch(self, queries: np.ndarray, k: int,
+                     layer_filter: Optional[str] = None
+                     ) -> List[List[Hit]]:
+        """Per-query top-k hits for a (B, d) query batch in ONE kernel
+        launch; row b of the result corresponds to ``queries[b]``."""
         self._refresh()
-        if not self._ids:
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (B, d), got {q.shape}")
+        if q.shape[0] == 0:
             return []
-        embs, ids, layers = self._embs, self._ids, self._layers
-        if layer_filter == "leaf":
-            sel = np.nonzero(layers == 0)[0]
-        elif layer_filter == "summary":
-            sel = np.nonzero(layers > 0)[0]
-        else:
-            sel = None
-        if sel is not None:
-            if sel.size == 0:
-                return []
-            embs = embs[sel]
-        k_eff = min(k, embs.shape[0])
-        vals, idx = mips_topk(jnp.asarray(query[None, :]),
-                              jnp.asarray(embs), k_eff)
-        vals = np.asarray(vals)[0]
-        idx = np.asarray(idx)[0]
-        if sel is not None:
-            idx = sel[idx]
-        return [Hit(node_id=ids[int(i)], score=float(v),
-                    layer=int(layers[int(i)]))
-                for v, i in zip(vals, idx)]
+        n_valid = self._valid_count(layer_filter)
+        if n_valid == 0 or k <= 0:
+            return [[] for _ in range(q.shape[0])]
+        k_eff = min(k, n_valid)
+        bias = (MASK_BIAS,
+                MASK_BIAS if layer_filter == "leaf" else 0.0,
+                MASK_BIAS if layer_filter == "summary" else 0.0)
+        vals, idx = flagged_mips_topk(jnp.asarray(q), self._buf, k_eff,
+                                      bias)
+        vals = np.asarray(vals)
+        idx = np.asarray(idx)
+        out: List[List[Hit]] = []
+        for b in range(q.shape[0]):
+            out.append([
+                Hit(node_id=self._row_ids[int(r)], score=float(v),
+                    layer=int(self._row_layers[int(r)]))
+                for v, r in zip(vals[b], idx[b])])
+        return out

@@ -12,6 +12,20 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def tpu_compiler_params(**kwargs):
+    """Version-portable ``pltpu.CompilerParams`` constructor.
+
+    The class was renamed from ``TPUCompilerParams`` to
+    ``CompilerParams`` across JAX releases; resolve whichever this
+    installation provides.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
 def interpret_default() -> bool:
     """Pallas interpret mode: True off-TPU (CPU correctness runs)."""
     return not on_tpu()

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv
+from repro.kernels.common import cdiv, tpu_compiler_params
 from repro.kernels.mips_topk.kernel import _NEG, _merge_topk
 
 
@@ -88,7 +88,7 @@ def hamming_topk_pallas(qc: jnp.ndarray, dbc: jnp.ndarray, k: int, *,
             pltpu.VMEM((bq, k), jnp.float32),
             pltpu.VMEM((bq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qc_p, dbc_p)

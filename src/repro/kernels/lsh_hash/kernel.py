@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv
+from repro.kernels.common import cdiv, tpu_compiler_params
 
 
 def _lsh_hash_kernel(v_ref, h_ref, out_ref, acc_ref, *, n_d: int, k: int):
@@ -85,7 +85,7 @@ def lsh_hash_pallas(v: jnp.ndarray, h: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((v_p.shape[0], n_words),
                                        jnp.uint32),
         scratch_shapes=[pltpu.VMEM((bn, k_pad), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(v_p, h_p)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv
+from repro.kernels.common import cdiv, tpu_compiler_params
 
 _NEG = -3.0e38  # python float: avoids capturing a traced constant
 
@@ -134,7 +134,7 @@ def mips_topk_pallas(q: jnp.ndarray, db: jnp.ndarray, k: int, *,
             pltpu.VMEM((bq, k), jnp.float32),
             pltpu.VMEM((bq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(q_p, db_p)

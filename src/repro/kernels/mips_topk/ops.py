@@ -28,6 +28,41 @@ def mips_topk(q: jnp.ndarray, db: jnp.ndarray, k: int, *,
     return ref.mips_topk_ref(q, db, k)
 
 
+# Additive score bias that pushes a row below every real candidate
+# (unit-norm embeddings score in [-1, 1]; any realistic inner product
+# is dwarfed) while staying far above the kernel's internal -3e38
+# padding sentinel, so masked rows rank after real rows but before
+# out-of-range padding.
+MASK_BIAS = -3.0e30
+
+
+def flagged_mips_topk(q: jnp.ndarray, db_flagged: jnp.ndarray, k: int,
+                      flag_bias: Tuple[float, ...], *,
+                      use_pallas: bool | None = None,
+                      interpret: bool | None = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k over a flag-augmented DB without touching the kernel.
+
+    ``db_flagged`` is ``[embeddings | F indicator columns]`` (each 0/1);
+    ``flag_bias`` gives one additive score bias per indicator column
+    (``MASK_BIAS`` to exclude rows with that flag, 0 to ignore it).
+    The bias is folded into the inner product by appending the bias
+    values to every query row, so any plain MIPS top-k kernel — ref or
+    Pallas, local or sharded — applies the mask for free.  This is how
+    the vector store keeps tombstoned rows and layer filters on-device
+    instead of re-stacking host-side subsets per query.
+    """
+    n_flags = len(flag_bias)
+    d = db_flagged.shape[1] - n_flags
+    assert d == q.shape[1], (q.shape, db_flagged.shape, n_flags)
+    bias = jnp.broadcast_to(
+        jnp.asarray(flag_bias, dtype=jnp.float32)[None, :],
+        (q.shape[0], n_flags))
+    q_aug = jnp.concatenate([q.astype(jnp.float32), bias], axis=1)
+    return mips_topk(q_aug, db_flagged, k, use_pallas=use_pallas,
+                     interpret=interpret)
+
+
 def merge_sharded_topk(vals: jnp.ndarray, idx: jnp.ndarray,
                        k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Merge per-shard top-k results: (s, b, k) -> global (b, k).

@@ -37,6 +37,15 @@ from repro.train.optimizer import AdafactorState, AdamWState, \
 from jax.sharding import NamedSharding
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions: older
+    releases return a one-element list of dicts, newer return the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _axes_tree(api: ModelAPI):
     """Logical-axes pytree without allocating full params: init() the
     reduced config (same tree structure) and keep its axes twin."""
@@ -173,7 +182,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_breakdown(hlo)
     coll_bytes = sum(b for _, b in coll.values())
@@ -243,7 +252,7 @@ def _probe_one(cfg, shape, mesh, rules, include_optimizer) -> dict:
     with mesh:
         with activation_sharding(mesh, rules):
             compiled = jax.jit(fn).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = collective_breakdown(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -2,14 +2,21 @@
 
 Requests queue up; the engine admits up to ``max_batch`` of them into
 fixed decode slots, prefills each prompt into its slot's KV cache, and
-steps all active slots together with one jitted ``decode_step`` per
-token (padded fixed shapes — no recompilation).  Slots free as soon as
-a sequence emits EOS or hits its token budget and are refilled from the
-queue: the slot-level admission/eviction is the continuous-batching
+decodes with *micro-batched* steps: active slots are grouped by cache
+length and each group shares ONE jitted ``decode_step`` launch (padded
+fixed shapes — no recompilation).  Requests admitted together decode in
+lock-step, so concurrent traffic costs one kernel launch per token
+instead of one per slot per token; ``stats['decode_launches']`` vs
+``stats['slot_steps']`` measures the sharing ratio.  Slots free as soon
+as a sequence emits EOS or hits its token budget and are refilled from
+the queue: the slot-level admission/eviction is the continuous-batching
 scheduling pattern (vLLM-style) restricted to whole-slot granularity.
+(Prefill is still per-admission; batched prefill for equal-length
+prompts is a ROADMAP open item.)
 
-This is the LLM backend for EraRAG's summarizer (LMSummarizer) and for
-the QA reader in examples/rag_serve.py.
+This is the LLM backend for EraRAG's summarizer (LMSummarizer), for
+the QA reader in examples/rag_serve.py, and for
+``RAGPipeline.answer_batch``'s shared-launch reader path.
 """
 from __future__ import annotations
 
@@ -57,6 +64,10 @@ class Engine:
         self._queue: "queue.Queue" = queue.Queue()
         self._results: Dict[int, List[int]] = {}
         self._next_id = 0
+        # launch-sharing instrumentation: slot_steps counts (slot,
+        # token) decode units, decode_launches the kernel launches that
+        # served them; equal-length grouping makes launches < steps
+        self.stats = {"decode_launches": 0, "slot_steps": 0}
 
         def _decode(params, tokens, caches, lengths):
             """Per-slot decode: each slot has its own cache length."""
@@ -93,10 +104,17 @@ class Engine:
 
     def generate(self, prompt: str, max_new_tokens: Optional[int] = None
                  ) -> str:
-        rid = self.submit(prompt, max_new_tokens)
+        return self.generate_batch([prompt], max_new_tokens)[0]
+
+    def generate_batch(self, prompts: List[str],
+                       max_new_tokens: Optional[int] = None
+                       ) -> List[str]:
+        """Submit a prompt batch before draining so concurrent requests
+        land in slots together and share decode launches."""
+        rids = [self.submit(p, max_new_tokens) for p in prompts]
         self.run_until_done()
-        toks = self._results.pop(rid)
-        return " ".join(f"tok{t}" for t in toks)
+        return [" ".join(f"tok{t}" for t in self._results.pop(r))
+                for r in rids]
 
     # ------------------------------------------------------------------
     def _admit(self) -> None:
@@ -124,35 +142,48 @@ class Engine:
             slot.request_id = rid
 
     def step(self) -> int:
-        """One engine iteration: admit + single batched decode step.
+        """One engine iteration: admit + micro-batched decode.
 
-        Returns number of active slots stepped."""
+        ``decode_step`` strides the whole slot batch at ONE cache
+        length, so slots are grouped by length and each group shares a
+        single launch (slots admitted together stay in lock-step and
+        keep sharing until one finishes).  Rows outside the group
+        compute garbage that is discarded — their caches and outputs
+        are untouched.  Returns number of active slots stepped."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:
             return 0
-        # uniform decode only strides slots at equal length; pad by
-        # stepping each unique length group (bounded by max_batch)
+        groups: Dict[int, List[int]] = {}
         for i in active:
-            slot = self.slots[i]
-            tok = jnp.full((self.ecfg.max_batch, 1),
-                           slot.out_tokens[-1], dtype=jnp.int32)
+            groups.setdefault(self.slots[i].length, []).append(i)
+        for length, idxs in sorted(groups.items()):
+            tok = np.zeros((self.ecfg.max_batch, 1), dtype=np.int32)
+            for i in idxs:
+                tok[i, 0] = self.slots[i].out_tokens[-1]
             logits, new_caches = self._decode_step(
-                self.params, tok, self.caches,
-                jnp.int32(slot.length))
-            def keep_row(old, new):
-                return old.at[:, i:i + 1].set(new[:, i:i + 1])
-            self.caches = jax.tree.map(keep_row, self.caches,
+                self.params, jnp.asarray(tok), self.caches,
+                jnp.int32(length))
+            rows = jnp.asarray(np.asarray(idxs, np.int32))
+
+            def keep_rows(old, new):
+                return old.at[:, rows].set(new[:, rows])
+            self.caches = jax.tree.map(keep_rows, self.caches,
                                        new_caches)
-            nxt = int(np.argmax(np.asarray(logits)[i]))
-            slot.out_tokens.append(nxt)
-            slot.length += 1
-            done = (nxt == EOS_ID or
-                    len(slot.out_tokens) >= slot.budget or
-                    slot.length >= self.ecfg.max_seq_len - 1)
-            if done:
-                self._results[slot.request_id] = slot.out_tokens
-                self.slots[i] = _Slot()
+            self.stats["decode_launches"] += 1
+            self.stats["slot_steps"] += len(idxs)
+            logits = np.asarray(logits)
+            for i in idxs:
+                slot = self.slots[i]
+                nxt = int(np.argmax(logits[i]))
+                slot.out_tokens.append(nxt)
+                slot.length += 1
+                done = (nxt == EOS_ID or
+                        len(slot.out_tokens) >= slot.budget or
+                        slot.length >= self.ecfg.max_seq_len - 1)
+                if done:
+                    self._results[slot.request_id] = slot.out_tokens
+                    self.slots[i] = _Slot()
         return len(active)
 
     def run_until_done(self, max_iters: int = 10_000) -> None:

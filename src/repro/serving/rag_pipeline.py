@@ -2,15 +2,19 @@
 
 The paper's Alg 2 as a service: queries retrieve a budgeted context
 from the hierarchical graph, the context + question form the reader
-prompt, and the engine decodes the answer.  Also provides the
-deterministic ``ExtractiveReader`` used by benchmarks so Accuracy /
-Recall are measurable offline (containment metric, §IV).
+prompt, and the engine decodes the answer.  ``answer_batch``
+micro-batches concurrent questions end-to-end — one retrieval kernel
+launch for the whole question block (``EraRAG.query_batch``) and, with
+an LM reader attached, a shared-slot decode via
+``Engine.generate_batch``.  Also provides the deterministic
+``ExtractiveReader`` used by benchmarks so Accuracy / Recall are
+measurable offline (containment metric, §IV).
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.erarag import EraRAG
 from repro.core.retrieve import Retrieval
@@ -80,16 +84,57 @@ class RAGPipeline:
         self.reader = reader or ExtractiveReader()
         self.engine = engine  # optional LM reader
 
+    @staticmethod
+    def _prompt(question: str, context: str) -> str:
+        return f"Context:\n{context}\n\nQuestion: {question}\nAnswer:"
+
     def answer(self, question: str, mode: str = "collapsed"
                ) -> RAGAnswer:
         r = self.rag.query(question, mode=mode)
         if self.engine is not None:
-            prompt = (f"Context:\n{r.context}\n\nQuestion: {question}\n"
-                      f"Answer:")
-            text = self.engine.generate(prompt)
+            text = self.engine.generate(self._prompt(question,
+                                                     r.context))
         elif "partner of" in question:
             text, r = self.reader.answer_multihop(question, self.rag)
         else:
             text = self.reader.answer(question, r.context)
         return RAGAnswer(answer=text, context=r.context,
                          n_context_tokens=r.n_tokens, hits=len(r.hits))
+
+    def answer_batch(self, questions: Sequence[str],
+                     mode: str = "collapsed") -> List[RAGAnswer]:
+        """Answer a question block with shared kernel launches: one
+        batched retrieval scan, then (if an LM reader is attached) a
+        decode where all prompts occupy engine slots concurrently.
+        Multihop questions fall back to the per-question path (their
+        second retrieval round depends on the first answer)."""
+        questions = list(questions)
+        if not questions:
+            return []
+        out: List[Optional[RAGAnswer]] = [None] * len(questions)
+        if self.engine is not None:
+            rets = self.rag.query_batch(questions, mode=mode)
+            texts = self.engine.generate_batch(
+                [self._prompt(q, r.context)
+                 for q, r in zip(questions, rets)])
+            for i, (r, text) in enumerate(zip(rets, texts)):
+                out[i] = RAGAnswer(answer=text, context=r.context,
+                                   n_context_tokens=r.n_tokens,
+                                   hits=len(r.hits))
+            return out  # type: ignore[return-value]
+        plain = [i for i, q in enumerate(questions)
+                 if "partner of" not in q]
+        rets = self.rag.query_batch([questions[i] for i in plain],
+                                    mode=mode)
+        for i, r in zip(plain, rets):
+            text = self.reader.answer(questions[i], r.context)
+            out[i] = RAGAnswer(answer=text, context=r.context,
+                               n_context_tokens=r.n_tokens,
+                               hits=len(r.hits))
+        for i, q in enumerate(questions):
+            if out[i] is None:  # multihop: round 2 depends on round 1
+                text, r = self.reader.answer_multihop(q, self.rag)
+                out[i] = RAGAnswer(answer=text, context=r.context,
+                                   n_context_tokens=r.n_tokens,
+                                   hits=len(r.hits))
+        return out  # type: ignore[return-value]

@@ -1,9 +1,12 @@
 """Fuzz the incremental engine: arbitrary insertion batchings must
 preserve every structural invariant and converge to the same node set
 (order-independence of the final graph content at the leaf level, and
-bounded divergence above it)."""
+bounded divergence above it).  Hypothesis-driven when available, with
+deterministic seeded-numpy batching fallbacks otherwise."""
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+from conftest import (HealthCheck, given, requires_hypothesis, settings,
+                      st)
 
 from repro.common.config import EraRAGConfig
 from repro.core.graph import EraGraph
@@ -32,12 +35,7 @@ def _mk_chunks(seed: int, n: int):
     return chunks
 
 
-@given(st.integers(min_value=0, max_value=50),
-       st.lists(st.integers(min_value=1, max_value=17), min_size=1,
-                max_size=8))
-@settings(max_examples=25, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-def test_random_batchings_keep_invariants(seed, batch_sizes):
+def check_random_batchings(seed, batch_sizes):
     total = sum(batch_sizes)
     chunks = _mk_chunks(seed, total)
     g = EraGraph(CFG, _EMB)
@@ -56,9 +54,27 @@ def test_random_batchings_keep_invariants(seed, batch_sizes):
             assert s.size <= CFG.s_max
 
 
-@given(st.integers(min_value=0, max_value=20))
-@settings(max_examples=10, deadline=None)
-def test_leaf_content_is_insertion_order_independent(seed):
+@requires_hypothesis
+@given(st.integers(min_value=0, max_value=50),
+       st.lists(st.integers(min_value=1, max_value=17), min_size=1,
+                max_size=8))
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_random_batchings_keep_invariants(seed, batch_sizes):
+    check_random_batchings(seed, batch_sizes)
+
+
+def test_random_batchings_keep_invariants_seeded():
+    """Deterministic fallback: seeded random batch interleavings."""
+    rng = np.random.default_rng(7)
+    for seed in range(6):
+        n_batches = int(rng.integers(1, 9))
+        batch_sizes = [int(rng.integers(1, 18))
+                       for _ in range(n_batches)]
+        check_random_batchings(seed, batch_sizes)
+
+
+def check_order_independence(seed):
     chunks = _mk_chunks(seed, 24)
     a = EraGraph(CFG, _EMB)
     a.insert_chunks(chunks)
@@ -72,3 +88,15 @@ def test_leaf_content_is_insertion_order_independent(seed):
     # leaf keys identical (hyperplanes persisted => same hashing)
     for cid in a.layer_order[0]:
         assert a.nodes[cid].key == b.nodes[cid].key
+
+
+@requires_hypothesis
+@given(st.integers(min_value=0, max_value=20))
+@settings(max_examples=10, deadline=None)
+def test_leaf_content_is_insertion_order_independent(seed):
+    check_order_independence(seed)
+
+
+def test_leaf_content_order_independent_seeded():
+    for seed in (0, 3, 11):
+        check_order_independence(seed)

@@ -1,7 +1,12 @@
-"""HyperplaneLSH: determinism, persistence, Theorem-1 behaviour."""
+"""HyperplaneLSH: determinism, persistence, Theorem-1 behaviour.
+
+Most tests are deterministic; the one hypothesis property test has a
+seeded-grid fallback so LSH shape invariants stay covered offline.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, requires_hypothesis, settings, st
 
 from repro.core.lsh import HyperplaneLSH
 
@@ -75,10 +80,7 @@ def test_closer_vectors_share_more_bits():
     assert d_near < d_far
 
 
-@given(st.integers(min_value=1, max_value=80),
-       st.integers(min_value=1, max_value=70))
-@settings(max_examples=20, deadline=None)
-def test_hash_shape_properties(n, k):
+def check_hash_shape(n, k):
     lsh = HyperplaneLSH(dim=8, n_hyperplanes=k, seed=0)
     v = np.random.default_rng(n).standard_normal((n, 8)).astype(
         np.float32)
@@ -90,6 +92,24 @@ def test_hash_shape_properties(n, k):
     if rem:
         tail = packed[:, -1] >> np.uint32(rem)
         assert np.all(tail == 0)
+
+
+@requires_hypothesis
+@given(st.integers(min_value=1, max_value=80),
+       st.integers(min_value=1, max_value=70))
+@settings(max_examples=20, deadline=None)
+def test_hash_shape_properties(n, k):
+    check_hash_shape(n, k)
+
+
+def test_hash_shape_properties_seeded():
+    """Deterministic fallback: word-boundary ks plus a random grid."""
+    for k in (1, 31, 32, 33, 63, 64, 65, 70):
+        check_hash_shape(5, k)
+    rng = np.random.default_rng(4)
+    for _ in range(12):
+        check_hash_shape(int(rng.integers(1, 81)),
+                         int(rng.integers(1, 71)))
 
 
 def test_bad_input_shape_raises():

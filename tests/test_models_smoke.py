@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.common.registry import get_arch, list_archs
 from repro.models.api import get_api
 

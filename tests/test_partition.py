@@ -1,5 +1,12 @@
-"""Property tests for the size-bounded partitioner (paper Alg 1 L7-11)."""
-from hypothesis import given, settings, strategies as st
+"""Property tests for the size-bounded partitioner (paper Alg 1 L7-11).
+
+Hypothesis-driven when available; the seeded-numpy fallbacks below
+cover the same invariants deterministically when it is not.
+"""
+import numpy as np
+import pytest
+
+from conftest import given, requires_hypothesis, settings, st
 
 from repro.core.partition import (
     choose_parts,
@@ -7,24 +14,11 @@ from repro.core.partition import (
     make_runs,
     partition_items,
     segments_contiguous,
-    sort_items,
     split_even,
 )
 
 
-def items_strategy():
-    return st.lists(
-        st.tuples(st.integers(min_value=0, max_value=2**40),
-                  st.uuids().map(str)),
-        min_size=0, max_size=300, unique_by=lambda t: t[1])
-
-
-@given(items_strategy(),
-       st.integers(min_value=1, max_value=20),
-       st.integers(min_value=0, max_value=20))
-@settings(max_examples=200, deadline=None)
-def test_partition_invariants(items, s_min, extra):
-    s_max = s_min + extra
+def check_partition_invariants(items, s_min, s_max):
     segs = partition_items(items, s_min, s_max)
 
     # one-to-one: no item lost, none duplicated
@@ -48,8 +42,41 @@ def test_partition_invariants(items, s_min, extra):
             if p <= n // s_min:
                 parts = split_even(run, p)
                 assert all(len(x) >= s_min for x in parts)
+    return segs
 
 
+def random_items(rng, n_max=300):
+    n = int(rng.integers(0, n_max))
+    keys = rng.integers(0, 2**40, size=n)
+    return [(int(k), f"id{j}") for j, k in enumerate(keys)]
+
+
+def items_strategy():
+    return st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2**40),
+                  st.uuids().map(str)),
+        min_size=0, max_size=300, unique_by=lambda t: t[1])
+
+
+@requires_hypothesis
+@given(items_strategy(),
+       st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=20))
+@settings(max_examples=200, deadline=None)
+def test_partition_invariants(items, s_min, extra):
+    check_partition_invariants(items, s_min, s_min + extra)
+
+
+def test_partition_invariants_seeded():
+    """Deterministic fallback: same invariants over seeded cases."""
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        s_min = int(rng.integers(1, 21))
+        s_max = s_min + int(rng.integers(0, 21))
+        check_partition_invariants(random_items(rng), s_min, s_max)
+
+
+@requires_hypothesis
 @given(items_strategy(), st.integers(min_value=2, max_value=15))
 @settings(max_examples=100, deadline=None)
 def test_only_one_small_segment_allowed(items, s_min):
@@ -64,6 +91,20 @@ def test_only_one_small_segment_allowed(items, s_min):
         assert len(segs) <= 1
 
 
+def test_only_one_small_segment_allowed_seeded():
+    rng = np.random.default_rng(1)
+    for _ in range(60):
+        s_min = int(rng.integers(2, 16))
+        items = random_items(rng, n_max=120)
+        segs = partition_items(items, s_min, 2 * s_min)
+        small = [s for s in segs if len(s) < s_min]
+        if len(items) >= s_min:
+            assert not small, (len(items), [len(s) for s in segs])
+        else:
+            assert len(segs) <= 1
+
+
+@requires_hypothesis
 @given(items_strategy(), st.integers(min_value=1, max_value=12),
        st.integers(min_value=0, max_value=12))
 @settings(max_examples=100, deadline=None)
@@ -74,6 +115,18 @@ def test_partition_deterministic(items, s_min, extra):
     assert a == b  # input order must not matter
 
 
+def test_partition_deterministic_seeded():
+    rng = np.random.default_rng(2)
+    for _ in range(40):
+        s_min = int(rng.integers(1, 13))
+        s_max = s_min + int(rng.integers(0, 13))
+        items = random_items(rng, n_max=150)
+        a = partition_items(items, s_min, s_max)
+        b = partition_items(list(reversed(items)), s_min, s_max)
+        assert a == b
+
+
+@requires_hypothesis
 @given(st.integers(min_value=1, max_value=500),
        st.integers(min_value=1, max_value=20),
        st.integers(min_value=0, max_value=20))
@@ -84,6 +137,16 @@ def test_choose_parts_bounds(n, s_min, extra):
     assert 1 <= p <= n
     # even split into p parts never exceeds s_max
     assert -(-n // p) <= s_max or n <= s_max
+
+
+def test_choose_parts_bounds_exhaustive():
+    """Deterministic fallback: full grid up to n=200, bounds to 20."""
+    for n in range(1, 201):
+        for s_min in range(1, 21):
+            for s_max in (s_min, s_min + 3, s_min + 20):
+                p = choose_parts(n, s_min, s_max)
+                assert 1 <= p <= n
+                assert -(-n // p) <= s_max or n <= s_max
 
 
 def test_split_even_exact():

@@ -1,0 +1,136 @@
+"""Retrieval edge cases + batched/looped parity.
+
+Covers the boundaries the main retrieval suite skips: degenerate
+adaptive split fractions, an empty summary layer, over-large k, a token
+budget smaller than the first hit, and exact equivalence between the
+batched search paths and their per-query loops.
+"""
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.erarag import EraRAG
+from repro.core.retrieve import (adaptive_search, adaptive_search_batch,
+                                 collapsed_search,
+                                 collapsed_search_batch)
+from repro.data.corpus import SyntheticCorpus
+from repro.embed.hashing import HashingEmbedder
+
+CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
+                   max_layers=3, chunk_tokens=32, top_k=6,
+                   token_budget=512)
+
+
+@pytest.fixture(scope="module")
+def rag():
+    corpus = SyntheticCorpus.generate(n_docs=30, n_topics=4, seed=0)
+    r = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
+    r.insert_docs(corpus.docs)
+    return r, corpus
+
+
+def _q(r, text):
+    return r.embedder.encode([text])[0]
+
+
+def test_adaptive_p_zero_takes_only_secondary(rag):
+    r, corpus = rag
+    q = _q(r, corpus.qa[0].question)
+    res = adaptive_search(r.graph, r.store, q, 6, 10**9, p=0.0,
+                          mode="detailed", tokenizer=r.tokenizer)
+    assert res.hits and all(h.layer > 0 for h in res.hits)
+    res = adaptive_search(r.graph, r.store, q, 6, 10**9, p=0.0,
+                          mode="summarized", tokenizer=r.tokenizer)
+    assert res.hits and all(h.layer == 0 for h in res.hits)
+
+
+def test_adaptive_p_one_takes_only_primary(rag):
+    r, corpus = rag
+    q = _q(r, corpus.qa[0].question)
+    res = adaptive_search(r.graph, r.store, q, 6, 10**9, p=1.0,
+                          mode="detailed", tokenizer=r.tokenizer)
+    assert res.hits and all(h.layer == 0 for h in res.hits)
+
+
+def test_empty_summary_layer():
+    """A corpus below s_max never grows a second layer: summary-side
+    searches must come back empty, not crash."""
+    r = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
+    r.insert_docs([("doc0", "One short sentence about nothing much.")])
+    assert r.graph.n_layers == 1  # leaves only
+    q = _q(r, "anything at all")
+    assert r.store.search(q, 4, layer_filter="summary") == []
+    res = adaptive_search(r.graph, r.store, q, 4, 10**9, p=0.0,
+                          mode="detailed", tokenizer=r.tokenizer)
+    assert res.hits == []
+    # collapsed search still serves from the leaf layer
+    res = collapsed_search(r.graph, r.store, q, 4, 10**9, r.tokenizer)
+    assert res.hits
+
+
+def test_k_larger_than_store(rag):
+    r, corpus = rag
+    q = _q(r, corpus.qa[0].question)
+    n = r.store.size
+    hits = r.store.search(q, n + 50)
+    assert len(hits) == n
+    assert len(set(h.node_id for h in hits)) == n
+
+
+def test_budget_smaller_than_first_hit(rag):
+    r, corpus = rag
+    q = _q(r, corpus.qa[0].question)
+    res = collapsed_search(r.graph, r.store, q, 6, 1, r.tokenizer)
+    # greedy budgeting always keeps the top hit, then stops
+    assert len(res.hits) == 1
+    top = r.store.search(q, 1)[0]
+    assert res.hits[0].node_id == top.node_id
+
+
+def test_collapsed_batch_matches_loop(rag):
+    r, corpus = rag
+    texts = [qa.question for qa in corpus.qa[:10]]
+    q = r.embedder.encode(texts)
+    batched = collapsed_search_batch(r.graph, r.store, q, 6, 256,
+                                     r.tokenizer)
+    looped = [collapsed_search(r.graph, r.store, qi, 6, 256,
+                               r.tokenizer) for qi in q]
+    for a, b in zip(batched, looped):
+        assert [(h.node_id, h.score) for h in a.hits] == \
+            [(h.node_id, h.score) for h in b.hits]
+        assert a.context == b.context
+        assert a.n_tokens == b.n_tokens
+
+
+def test_adaptive_batch_matches_loop(rag):
+    r, corpus = rag
+    texts = [qa.question for qa in corpus.qa[:10]]
+    q = r.embedder.encode(texts)
+    for mode in ("detailed", "summarized"):
+        batched = adaptive_search_batch(r.graph, r.store, q, 6, 256,
+                                        0.5, mode, r.tokenizer)
+        looped = [adaptive_search(r.graph, r.store, qi, 6, 256, 0.5,
+                                  mode, r.tokenizer) for qi in q]
+        for a, b in zip(batched, looped):
+            assert [(h.node_id, h.score) for h in a.hits] == \
+                [(h.node_id, h.score) for h in b.hits]
+            assert a.context == b.context
+
+
+def test_query_batch_matches_query(rag):
+    r, corpus = rag
+    texts = [qa.question for qa in corpus.qa[:8]]
+    for mode in ("collapsed", "detailed", "summarized"):
+        batched = r.query_batch(texts, mode=mode)
+        looped = [r.query(t, mode=mode) for t in texts]
+        for a, b in zip(batched, looped):
+            assert [h.node_id for h in a.hits] == \
+                [h.node_id for h in b.hits]
+            assert a.context == b.context
+    assert r.query_batch([]) == []
+
+
+def test_query_batch_empty_graph():
+    r = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
+    res = r.query_batch(["nothing indexed yet"])
+    assert res[0].hits == [] and res[0].context == ""

@@ -1,4 +1,5 @@
 """End-to-end behaviour tests for the paper's system."""
+import functools
 import subprocess
 import sys
 import textwrap
@@ -96,6 +97,7 @@ def test_engine_generates_and_frees_slots():
     assert not any(s.active for s in eng.slots)
 
 
+@pytest.mark.slow
 def test_dryrun_entrypoint_smoke():
     """launch.dryrun compiles one small cell in a fresh process (512
     fake devices must not leak into this test process)."""
@@ -123,6 +125,10 @@ def test_shard_map_retrieval_exact():
     from jax.sharding import PartitionSpec as P
     from repro.kernels.mips_topk.ops import merge_sharded_topk, \
         mips_topk
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:  # older releases: experimental namespace
+        from jax.experimental.shard_map import shard_map
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",))
     rng = np.random.default_rng(0)
@@ -130,10 +136,10 @@ def test_shard_map_retrieval_exact():
     q = rng.standard_normal((3, 16)).astype(np.float32)
     rows = db.shape[0] // n_dev
 
-    @jax.shard_map(mesh=mesh, in_specs=(P(None, None),
-                                        P("data", None)),
-                   out_specs=(P("data", None, None),
-                              P("data", None, None)))
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(None, None), P("data", None)),
+                       out_specs=(P("data", None, None),
+                                  P("data", None, None)))
     def search(qq, shard):
         v, i = mips_topk(qq, shard, 5)
         return v[None], (i + jax.lax.axis_index("data") * rows)[None]

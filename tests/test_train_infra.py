@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.checkpoint.store import CheckpointManager, load_checkpoint, \
     save_checkpoint
 from repro.data.pipeline import Prefetcher, synthetic_lm_batches
