@@ -6,6 +6,7 @@ whether the gold answer text was retrieved into the context at all.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -16,6 +17,7 @@ from repro.core.baselines import BM25, GraphRAGLike, RaptorLike, \
 from repro.core.erarag import EraRAG
 from repro.data.corpus import QAItem, SyntheticCorpus
 from repro.embed.hashing import HashingEmbedder
+from repro.launch.mesh import local_data_mesh
 from repro.serving.rag_pipeline import ExtractiveReader, RAGPipeline
 
 BENCH_CFG = EraRAGConfig(embed_dim=128, n_hyperplanes=10, s_min=4,
@@ -29,6 +31,11 @@ def make_embedder(cfg: EraRAGConfig = BENCH_CFG) -> HashingEmbedder:
 
 SYSTEMS: Dict[str, Callable] = {
     "erarag": lambda cfg=BENCH_CFG: EraRAG(cfg, make_embedder(cfg)),
+    # index hash-sharded over the data mesh axis (0 = one per device),
+    # shard buffers placed on the local data mesh when one exists
+    "erarag-sharded": lambda cfg=BENCH_CFG: EraRAG(
+        dataclasses.replace(cfg, index_shards=0), make_embedder(cfg),
+        mesh=local_data_mesh()),
     "vanilla": lambda cfg=BENCH_CFG: VanillaRAG(cfg, make_embedder(cfg)),
     "bm25": lambda cfg=BENCH_CFG: BM25(cfg),
     "raptor": lambda cfg=BENCH_CFG: RaptorLike(cfg, make_embedder(cfg)),

@@ -23,6 +23,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         query_batch,
         roofline,
         segment_size,
+        sharded_store,
         small_update,
         static_qa,
         update_breakdown,
@@ -40,6 +41,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         "update_breakdown": lambda: update_breakdown.run(n_docs=n),
         "chunk_size": lambda: chunk_size.run(n_docs=half),
         "query_batch": lambda: query_batch.run(n_docs=half),
+        "sharded_store": lambda: sharded_store.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -50,6 +52,8 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         suites.pop("roofline")
         suites["query_batch"] = lambda: query_batch.run(
             n_docs=24, batch_sizes=(1, 8))
+        suites["sharded_store"] = lambda: sharded_store.run(
+            n_docs=24, batch=8)
     return suites
 
 

@@ -1,0 +1,106 @@
+"""Sharded-store scaling: per-shard staging locality, dead-row ratios,
+parity, and batched-query throughput vs the single-buffer store.
+
+The row set is hash-sharded over however many devices exist (one 1-D
+data mesh; on CPU CI this is the forced host platform).  Reported per
+shard: live rows, staged rows for the incremental round (the O(delta)
+locality evidence), and dead-row ratio after summary churn.  The
+parity row asserts sharded results match the single-buffer store
+exactly — the invariant the differential test suite enforces at
+commit time, re-checked here at benchmark scale.
+
+On the forced host platform the sharded QPS row is dominated by
+per-shard dispatch + host-side merge overhead at toy corpus scale; it
+is tracked for regressions, not as a speedup claim (the ROADMAP
+collective-launch item is the fix on real meshes).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row
+from repro.core.store import ShardedVectorStore
+from repro.launch.mesh import local_data_mesh
+
+
+def _best_time(fn, repeats: int = 3) -> float:
+    fn()  # warm up (jit/compile)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_docs: int = 60, n_shards: int | None = None,
+        batch: int = 16) -> List[str]:
+    n_dev = len(jax.devices())
+    n_shards = n_shards or max(2, n_dev)
+    mesh = local_data_mesh()
+
+    corpus = bench_corpus(n_docs=n_docs)
+    rag = SYSTEMS["erarag"]()
+    init, rounds = corpus.growth_rounds(0.5, 4)
+    rag.insert_docs(init)
+    flat = rag.store
+    flat.refresh()
+    sharded = ShardedVectorStore(rag.graph, n_shards=n_shards,
+                                 mesh=mesh)
+    sharded.refresh()
+
+    rows: List[str] = []
+    rep = sharded.shard_report()
+    sizes = [r["rows"] for r in rep]
+    rows.append(csv_row(
+        "sharded_store/build", 0.0,
+        f"n_shards={n_shards};n_devices={n_dev};"
+        f"rows_per_shard={'/'.join(str(s) for s in sizes)};"
+        f"balance={max(sizes) / max(1, min(sizes)):.2f}x"))
+
+    # incremental rounds: per-shard staged rows (delta locality)
+    staged0 = [st.rows_staged for st in sharded.shard_stats()]
+    for r in rounds:
+        rag.insert_docs(r)
+    sharded.refresh()
+    flat.refresh()
+    staged = [st.rows_staged - s0 for st, s0
+              in zip(sharded.shard_stats(), staged0)]
+    rep = sharded.shard_report()
+    rows.append(csv_row(
+        "sharded_store/update", 0.0,
+        f"staged_per_shard={'/'.join(str(s) for s in staged)};"
+        f"staged_total={sum(staged)};"
+        f"dead_ratio=" + "/".join(f"{r['dead_ratio']:.2f}"
+                                  for r in rep)))
+
+    # parity + throughput on a query block
+    questions = [qa.question for qa in corpus.qa]
+    block = (questions * ((batch // max(1, len(questions))) + 1))[:batch]
+    q = rag.embedder.encode(block)
+    flat_hits = flat.search_batch(q, rag.cfg.top_k)
+    shard_hits = sharded.search_batch(q, rag.cfg.top_k)
+    mismatch = sum(
+        [(h.node_id, h.score) for h in a]
+        != [(h.node_id, h.score) for h in b]
+        for a, b in zip(flat_hits, shard_hits))
+    rows.append(csv_row("sharded_store/parity", 0.0,
+                        f"mismatches={mismatch}_of_{len(block)}"))
+    assert mismatch == 0, f"sharded != flat on {mismatch} queries"
+
+    t_flat = _best_time(lambda: flat.search_batch(q, rag.cfg.top_k))
+    t_shard = _best_time(
+        lambda: sharded.search_batch(q, rag.cfg.top_k))
+    rows.append(csv_row(
+        f"sharded_store/qps_b{batch}", 1e6 * t_shard / batch,
+        f"sharded_qps={batch / max(t_shard, 1e-9):.1f};"
+        f"flat_qps={batch / max(t_flat, 1e-9):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -248,6 +248,9 @@ class EraRAGConfig:
     seed: int = 0                    # hyperplane PRNG seed (persisted)
     retrieval_bias_p: float = 0.5    # adaptive search p in [0, 1]
     summary_max_tokens: int = 96
+    # vector-index sharding over the data mesh axis: 1 = single-buffer
+    # store, >1 = that many hash-routed shards, 0 = one per device
+    index_shards: int = 1
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -255,6 +258,8 @@ class EraRAGConfig:
                              f"[{self.s_min}, {self.s_max}]")
         if not (0.0 <= self.retrieval_bias_p <= 1.0):
             raise ValueError("retrieval_bias_p must be in [0, 1]")
+        if self.index_shards < 0:
+            raise ValueError("index_shards must be >= 0 (0 = auto)")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":
         """Tab V ablation: scale tolerance delta around the mean size."""

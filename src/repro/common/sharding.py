@@ -15,6 +15,7 @@ import logging
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 logger = logging.getLogger(__name__)
@@ -164,6 +165,76 @@ def recsys_rules(serving: bool = False) -> LogicalRules:
         ("seq", None),
         ("layers", None),
     ])
+
+
+def retrieval_rules() -> LogicalRules:
+    """Sharded-retrieval rules: DB shards/rows over the data axis;
+    query batches and per-shard top-k candidates replicated (the merge
+    collective is O(s*k) per query — see core/store.py)."""
+    return LogicalRules([
+        ("db_shards", ("data",)),
+        ("db_rows", ("data",)),
+        ("qbatch", None),
+        ("topk", None),
+        ("embed_flags", None),
+    ])
+
+
+def db_shard_axes(mesh: Mesh,
+                  rules: Optional[LogicalRules] = None
+                  ) -> Tuple[str, ...]:
+    """The mesh axes the ``db_shards`` logical axis resolves to (empty
+    when the rules replicate it or the mesh lacks those axes).  The
+    single resolver shared by ``shard_placements`` and the sharded
+    store, so both always agree on the shard axis."""
+    rules = rules or retrieval_rules()
+    axes = rules.mesh_axes_for("db_shards")
+    if axes is None:
+        return ()
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def mesh_axis_devices(mesh: Mesh, axes: Sequence[str]) -> List:
+    """Ordered device list spanning ``axes`` of the mesh, taking one
+    representative device (index 0) along every other mesh axis."""
+    names = list(mesh.axis_names)
+    devs = np.asarray(mesh.devices)
+    order = [names.index(a) for a in axes] + \
+        [i for i, n in enumerate(names) if n not in axes]
+    devs = np.transpose(devs, order)
+    lead = int(np.prod(devs.shape[:len(axes)])) if axes else 1
+    return list(devs.reshape(lead, -1)[:, 0])
+
+
+def shard_placements(mesh: Mesh, n_shards: int,
+                     rules: Optional[LogicalRules] = None) -> List:
+    """Owning device per shard id, resolved through the rules table.
+
+    The shard dim is the logical ``db_shards`` axis; a rules table that
+    maps it to ``None`` (or a mesh without those axes) replicates —
+    every placement is ``None`` (default device).  When the shard count
+    divides the device count, contiguous shard groups map to one device
+    (balanced rows, shard-major order); an uneven count degrades to
+    round-robin — logged when shards outnumber devices, since only
+    then do per-device row counts skew — never to a silent
+    single-device collapse, which would put per-chip memory back at
+    O(N).
+    """
+    axes = db_shard_axes(mesh, rules)
+    if not axes:
+        return [None] * n_shards
+    devs = mesh_axis_devices(mesh, axes)
+    if n_shards % len(devs) == 0:
+        per = n_shards // len(devs)
+        return [devs[i // per] for i in range(n_shards)]
+    if n_shards > len(devs):
+        # shards outnumber devices unevenly: per-device row counts can
+        # skew by one shard's worth — worth surfacing
+        logger.warning(
+            "shard_placements: %d shards do not divide %d devices on "
+            "axes %s; falling back to round-robin placement", n_shards,
+            len(devs), axes)
+    return [devs[i % len(devs)] for i in range(n_shards)]
 
 
 def rules_for_family(family: str, shape_kind: str = "") -> LogicalRules:

@@ -3,7 +3,8 @@ from repro.core.erarag import EraRAG
 from repro.core.graph import EraGraph, Node, Segment, UpdateReport
 from repro.core.lsh import HyperplaneLSH
 from repro.core.retrieve import Retrieval, adaptive_search, collapsed_search
-from repro.core.store import Hit, VectorStore
+from repro.core.store import Hit, ShardedVectorStore, VectorStore, \
+    store_from_state
 from repro.core.summarize import ExtractiveSummarizer, LMSummarizer, \
     SummaryResult
 
@@ -19,6 +20,8 @@ __all__ = [
     "collapsed_search",
     "Hit",
     "VectorStore",
+    "ShardedVectorStore",
+    "store_from_state",
     "ExtractiveSummarizer",
     "LMSummarizer",
     "SummaryResult",

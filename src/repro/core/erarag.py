@@ -17,20 +17,33 @@ from repro.common.config import EraRAGConfig
 from repro.core.graph import EraGraph, UpdateReport
 from repro.core.retrieve import Retrieval, adaptive_search_batch, \
     collapsed_search_batch
-from repro.core.store import VectorStore
+from repro.core.store import AnyStore, ShardedVectorStore, \
+    VectorStore, store_from_state
 from repro.core.summarize import Summarizer
 from repro.data.chunker import chunk_corpus
 from repro.data.tokenizer import HashTokenizer
 
 
+def make_store(graph, cfg: EraRAGConfig, mesh=None) -> AnyStore:
+    """cfg.index_shards: 1 -> single-buffer store (a mesh does not
+    override an explicitly unsharded config); >1 -> that many
+    hash-routed shards; 0 -> one shard per device / per data-axis
+    chip.  ``mesh`` places shard buffers over its data axis."""
+    if cfg.index_shards == 1:
+        return VectorStore(graph)
+    return ShardedVectorStore(
+        graph, n_shards=cfg.index_shards or None, mesh=mesh)
+
+
 class EraRAG:
     def __init__(self, cfg: EraRAGConfig, embedder,
-                 summarizer: Optional[Summarizer] = None):
+                 summarizer: Optional[Summarizer] = None, mesh=None):
         self.cfg = cfg
         self.embedder = embedder
+        self.mesh = mesh
         self.tokenizer = HashTokenizer()
         self.graph = EraGraph(cfg, embedder, summarizer, self.tokenizer)
-        self.store = VectorStore(self.graph)
+        self.store = make_store(self.graph, cfg, mesh)
         self.reports: List[UpdateReport] = []
 
     # ------------------------------------------------------------------
@@ -77,14 +90,25 @@ class EraRAG:
     def last_report(self) -> UpdateReport:
         return self.reports[-1] if self.reports else UpdateReport()
 
-    def state_dict(self) -> dict:
-        return self.graph.state_dict()
+    def state_dict(self, include_store: bool = False) -> dict:
+        """Graph snapshot (with delta-log tail); ``include_store``
+        additionally embeds the synced index buffers so a restart
+        skips even the initial re-stack."""
+        state = self.graph.state_dict()
+        if include_store:
+            state["store"] = self.store.state_dict()
+        return state
 
     @classmethod
     def from_state(cls, state: dict, embedder,
-                   summarizer: Optional[Summarizer] = None) -> "EraRAG":
+                   summarizer: Optional[Summarizer] = None,
+                   mesh=None) -> "EraRAG":
         cfg = EraRAGConfig(**state["cfg"])
-        obj = cls(cfg, embedder, summarizer)
+        obj = cls(cfg, embedder, summarizer, mesh=mesh)
         obj.graph = EraGraph.from_state(state, embedder, summarizer)
-        obj.store = VectorStore(obj.graph)
+        if "store" in state:
+            obj.store = store_from_state(state["store"], obj.graph,
+                                         mesh=mesh)
+        else:
+            obj.store = make_store(obj.graph, cfg, mesh)
         return obj

@@ -193,12 +193,17 @@ class EraGraph:
                                               Tuple[str, ...]]]]:
         """(added, removed) per version in ``(version, self.version]``.
 
-        Returns ``None`` when the log no longer covers that span (store
-        older than the trimmed window, or a graph restored via
-        ``from_state``) — callers must fall back to a full rebuild.
+        Returns ``None`` when the log cannot reconcile the two
+        versions: a span the trimmed window no longer covers, a graph
+        restored without its log (old ``from_state`` snapshots), or a
+        caller AHEAD of the graph (e.g. a persisted store restored
+        against an older graph snapshot — serving its extra rows would
+        mean ghost nodes).  Callers must fall back to a full rebuild.
         """
-        if version >= self.version:
+        if version == self.version:
             return []
+        if version > self.version:
+            return None
         span = range(version + 1, self.version + 1)
         if any(v not in self._delta_log for v in span):
             return None
@@ -485,6 +490,11 @@ class EraGraph:
                 [{"members": list(s.members), "parent": s.parent}
                  for s in segs]
                 for segs in self.segments],
+            # delta-log tail: lets a restored vector store resume with
+            # O(delta) refreshes instead of one full O(N) re-stack
+            "delta_log": [
+                [v, list(a), list(r)]
+                for v, (a, r) in sorted(self._delta_log.items())],
         }
 
     @classmethod
@@ -515,4 +525,8 @@ class EraGraph:
             g.segments.append(lst)
             g.member_seg.append({nid: seg for seg in lst
                                  for nid in seg.members})
+        if "delta_log" in state:   # older snapshots lack the log tail:
+            g._delta_log = {       # stores then fall back to a rebuild
+                int(v): (tuple(a), tuple(r))
+                for v, a, r in state["delta_log"]}
         return g

@@ -10,6 +10,12 @@ Every search comes in a batched variant (``*_search_batch``) that
 serves a whole ``(B, d)`` query block with one ``mips_topk`` launch per
 store scan; the single-query functions are the B=1 special case, so
 batched and looped results are identical by construction.
+
+Searches accept either store kind (``AnyStore``): the single-buffer
+``VectorStore`` or the ``ShardedVectorStore`` whose row set is split
+over the data mesh axis — both return bitwise-identical hits, so every
+path above this module (EraRAG, RAGPipeline, benchmarks) is
+shard-agnostic.
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.store import Hit, VectorStore
+from repro.core.store import AnyStore, Hit
 from repro.data.tokenizer import HashTokenizer
 
 
@@ -48,7 +54,7 @@ def _budgeted(graph, hits: Sequence[Hit], budget: int,
                      n_tokens=total)
 
 
-def collapsed_search_batch(graph, store: VectorStore, query_embs,
+def collapsed_search_batch(graph, store: AnyStore, query_embs,
                            k: int, token_budget: int,
                            tokenizer: Optional[HashTokenizer] = None
                            ) -> List[Retrieval]:
@@ -58,7 +64,7 @@ def collapsed_search_batch(graph, store: VectorStore, query_embs,
             for hits in hits_b]
 
 
-def collapsed_search(graph, store: VectorStore, query_emb, k: int,
+def collapsed_search(graph, store: AnyStore, query_emb, k: int,
                      token_budget: int,
                      tokenizer: Optional[HashTokenizer] = None
                      ) -> Retrieval:
@@ -67,7 +73,7 @@ def collapsed_search(graph, store: VectorStore, query_emb, k: int,
         tokenizer)[0]
 
 
-def adaptive_search_batch(graph, store: VectorStore, query_embs,
+def adaptive_search_batch(graph, store: AnyStore, query_embs,
                           k: int, token_budget: int, p: float,
                           mode: str = "detailed",
                           tokenizer: Optional[HashTokenizer] = None
@@ -95,7 +101,7 @@ def adaptive_search_batch(graph, store: VectorStore, query_embs,
     return out
 
 
-def adaptive_search(graph, store: VectorStore, query_emb, k: int,
+def adaptive_search(graph, store: AnyStore, query_emb, k: int,
                     token_budget: int, p: float,
                     mode: str = "detailed",
                     tokenizer: Optional[HashTokenizer] = None

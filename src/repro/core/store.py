@@ -1,4 +1,4 @@
-"""Incremental, batched, device-resident flat index (collapsed §III.D).
+"""Incremental, device-resident flat index — single-buffer and sharded.
 
 Mirrors the FAISS IndexFlat role in the paper, implemented on the
 ``mips_topk`` kernel, but maintained *incrementally*: instead of
@@ -14,29 +14,81 @@ exceed ``compact_threshold`` of the buffer the store compacts with one
 on-device gather, preserving row order so top-k tie-breaking stays
 bitwise-identical to a from-scratch rebuild.
 
+All buffer maintenance lives in one place, ``_Shard``: the
+single-buffer ``VectorStore`` is exactly one shard; the
+``ShardedVectorStore`` is N of them behind hash routing — so growth,
+tombstoning, compaction, and persistence can never diverge between the
+two stores.
+
+Sharded design (``ShardedVectorStore``)
+---------------------------------------
+The row set is split over the ``data`` mesh axis: every node id is
+hash-routed (stable blake2 of the id, mod ``n_shards``) to one owning
+shard, and each shard keeps its own independently grown / tombstoned /
+compacted device buffer — so per-version deltas cost O(delta) *per
+shard*, per-chip memory is O(N / n_shards), and one hot shard compacts
+without touching the others.  Queries dispatch ``flagged_mips_topk``
+on every shard's buffer (async — the per-device scans overlap), then
+merge the per-shard candidates with the ``merge_sharded_topk``
+collective (s * k entries per query — tiny next to the sharded scan).
+Shard buffers are placed on devices via the ``common/sharding.py``
+rules engine (``retrieval_rules`` + ``shard_placements``), which falls
+back to replication on a single device, so the same store runs on a
+real mesh or on a forced host platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+Invariants (asserted by ``tests/test_store_sharded.py``):
+
+- **routing determinism**: a node id's owning shard is a pure function
+  of the id — the same corpus always shards the same way, across
+  processes and restarts.
+- **global order parity**: every appended row carries a monotone global
+  sequence number (graph node-creation order); within a shard, row
+  order is always a subsequence of it (compaction preserves relative
+  order), and the merge collective breaks score ties by lowest
+  sequence.  Sharded ``search``/``search_batch`` results are therefore
+  *bitwise identical* to the single-buffer store and to a from-scratch
+  rebuild.
+- **delta locality**: a delta only touches the buffers of the shards
+  that own its ids; all other shards stage zero rows.
+
 Queries are batched end-to-end: ``search_batch`` issues ONE
-``mips_topk`` launch for a ``(B, d)`` query block; ``search`` is the
-B=1 special case.  ``stats`` counts refreshes, staged rows, tombstones
-and compactions so tests and benchmarks can assert the O(delta)
-maintenance claim.  Production sharding splits the row set over the
-``data`` mesh axis with a per-shard kernel scan + tiny top-k merge
-collective (see kernels/mips_topk/ops.merge_sharded_topk and
-launch/dryrun.py's retrieval cell).
+``mips_topk`` launch per shard for a ``(B, d)`` query block; ``search``
+is the B=1 special case.  ``stats`` counts refreshes, staged rows,
+tombstones and compactions (aggregated over shards for the sharded
+store; ``shard_report`` exposes the per-shard breakdown) so tests and
+benchmarks can assert the O(delta) maintenance claim.  Both stores
+serialize with ``state_dict``/``from_state`` — paired with the graph's
+persisted delta-log tail, a restored store resumes incrementally
+instead of paying a full O(N) re-stack.
 """
 from __future__ import annotations
 
+import functools
+import hashlib
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mips_topk.ops import MASK_BIAS, flagged_mips_topk
+from repro.kernels.mips_topk.ops import MASK_BIAS, flagged_mips_topk, \
+    merge_sharded_topk
 
 # trailing indicator columns of the device buffer
 N_FLAGS = 3
 _DEAD, _SUMMARY, _LEAF = 0, 1, 2
+
+# sentinels for per-shard candidate padding: a value below every real
+# (or even MASK_BIAS-masked, ~-3e30) score, and a sequence number above
+# every real row's, so padded candidates always merge last.  The merge
+# runs in int32 (jax default; x64 is disabled), so the monotone global
+# counter is renumbered — host-side metadata only, order-preserving —
+# before it can ever reach the sentinel / wrap (see _BaseStore._append).
+_VAL_PAD = float(np.finfo(np.float32).min)
+_SEQ_PAD = np.int64(2**31 - 1)
+_SEQ_LIMIT = 2**31 - 2**16
 
 
 @dataclass
@@ -59,94 +111,264 @@ class StoreStats:
     growths: int = 0
 
 
-class VectorStore:
-    def __init__(self, graph, *, compact_threshold: float = 0.25,
-                 min_capacity: int = 64):
-        self._graph = graph
-        self._version = -1          # graph version the index reflects
-        self._compact_threshold = float(compact_threshold)
-        self._min_capacity = int(min_capacity)
-        self.stats = StoreStats()
-        self._reset_empty()
+@functools.lru_cache(maxsize=1 << 16)
+def shard_of(node_id: str, n_shards: int) -> int:
+    """Stable owning shard of a node id (pure content hash — identical
+    across processes, restarts, and PYTHONHASHSEED).  A small LRU
+    absorbs the delta path asking for the same id up to three times
+    (stale check, tombstone routing, append routing) without pinning
+    the whole corpus's ids for the process lifetime."""
+    h = hashlib.blake2b(node_id.encode(), digest_size=8).digest()
+    return int.from_bytes(h, "big") % n_shards
 
-    # ------------------------------------------------------------------
-    # buffer maintenance
-    # ------------------------------------------------------------------
-    def _reset_empty(self) -> None:
-        self._dim = self._graph.cfg.embed_dim
-        self._capacity = 0
-        self._count = 0             # rows in use, tombstones included
-        self._n_dead = 0
-        self._buf: Optional[jnp.ndarray] = None  # (cap, d + N_FLAGS)
-        self._row_ids: List[str] = []            # row -> node id
-        self._row_layers = np.zeros((0,), np.int32)   # (cap,)
-        self._alive = np.zeros((0,), bool)            # (cap,)
-        self._row_of: Dict[str, int] = {}
-        self._n_alive = {"leaf": 0, "summary": 0}
+
+class _Shard:
+    """One device-resident buffer: geometric growth, tombstone column,
+    order-preserving compaction, persistence.
+
+    The single-buffer store is exactly one of these; the sharded store
+    is N of them behind hash routing.  Each row carries a global
+    sequence number (node-creation order) so cross-shard top-k ties
+    merge exactly like a single buffer's row-index tie-break."""
+
+    def __init__(self, dim: int, *, device=None, min_capacity: int = 64,
+                 stats: Optional[StoreStats] = None):
+        self.dim = dim
+        self.device = device
+        self.min_capacity = int(min_capacity)
+        self.stats = stats if stats is not None else StoreStats()
+        self.reset()
+
+    def reset(self) -> None:
+        self.capacity = 0
+        self.count = 0              # rows in use, tombstones included
+        self.n_dead = 0
+        self.buf: Optional[jnp.ndarray] = None  # (cap, d + N_FLAGS)
+        self.row_ids: List[str] = []
+        self.row_layers = np.zeros((0,), np.int32)
+        self.row_seq = np.zeros((0,), np.int64)  # global order
+        self.alive = np.zeros((0,), bool)
+        self.row_of: Dict[str, int] = {}
+        self.n_alive = {"leaf": 0, "summary": 0}
 
     def _ensure_capacity(self, extra: int) -> None:
-        need = self._count + extra
-        if need <= self._capacity:
+        need = self.count + extra
+        if need <= self.capacity:
             return
-        cap = max(self._min_capacity, self._capacity)
+        cap = max(self.min_capacity, self.capacity)
         while cap < need:
             cap *= 2
-        pad_rows = cap - self._capacity
-        d = self._dim
+        pad_rows = cap - self.capacity
+        d = self.dim
         # unused capacity rows carry the dead flag so the kernel can
         # scan the full buffer with stable shapes between growths
         pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
             .at[:, d + _DEAD].set(1.0)
-        self._buf = pad if self._buf is None \
-            else jnp.concatenate([self._buf, pad], axis=0)
-        self._row_layers = np.concatenate(
-            [self._row_layers, np.zeros((pad_rows,), np.int32)])
-        self._alive = np.concatenate(
-            [self._alive, np.zeros((pad_rows,), bool)])
-        self._capacity = cap
+        if self.buf is None:
+            self.buf = pad if self.device is None \
+                else jax.device_put(pad, self.device)
+        else:
+            self.buf = jnp.concatenate([self.buf, pad], axis=0)
+        self.row_layers = np.concatenate(
+            [self.row_layers, np.zeros((pad_rows,), np.int32)])
+        self.row_seq = np.concatenate(
+            [self.row_seq, np.full((pad_rows,), _SEQ_PAD, np.int64)])
+        self.alive = np.concatenate(
+            [self.alive, np.zeros((pad_rows,), bool)])
+        self.capacity = cap
         self.stats.growths += 1
 
-    def _append(self, ids: Sequence[str]) -> None:
+    def append(self, nodes: dict, ids: Sequence[str],
+               seqs: Sequence[int]) -> None:
         """Stage ``len(ids)`` new rows — the only host->device copy on
         the incremental path, O(delta) not O(N)."""
         if not ids:
             return
-        nodes = self._graph.nodes
         m = len(ids)
-        d = self._dim
+        d = self.dim
         self._ensure_capacity(m)
         block = np.zeros((m, d + N_FLAGS), np.float32)
-        for j, nid in enumerate(ids):
+        for j, (nid, seq) in enumerate(zip(ids, seqs)):
             node = nodes[nid]
             block[j, :d] = node.embedding
             cls = "summary" if node.layer > 0 else "leaf"
             block[j, d + (_SUMMARY if node.layer > 0 else _LEAF)] = 1.0
-            row = self._count + j
-            self._row_ids.append(nid)
-            self._row_layers[row] = node.layer
-            self._alive[row] = True
-            self._row_of[nid] = row
-            self._n_alive[cls] += 1
-        self._buf = jax.lax.dynamic_update_slice(
-            self._buf, jnp.asarray(block), (self._count, 0))
-        self._count += m
+            row = self.count + j
+            self.row_ids.append(nid)
+            self.row_layers[row] = node.layer
+            self.row_seq[row] = seq
+            self.alive[row] = True
+            self.row_of[nid] = row
+            self.n_alive[cls] += 1
+        self.buf = jax.lax.dynamic_update_slice(
+            self.buf, jnp.asarray(block), (self.count, 0))
+        self.count += m
         self.stats.rows_staged += m
 
-    def _tombstone(self, ids: Sequence[str]) -> None:
+    def tombstone(self, ids: Sequence[str]) -> None:
         rows = []
         for nid in ids:
-            row = self._row_of.pop(nid, None)
-            if row is None or not self._alive[row]:
+            row = self.row_of.pop(nid, None)
+            if row is None or not self.alive[row]:
                 continue
-            self._alive[row] = False
-            cls = "summary" if self._row_layers[row] > 0 else "leaf"
-            self._n_alive[cls] -= 1
+            self.alive[row] = False
+            cls = "summary" if self.row_layers[row] > 0 else "leaf"
+            self.n_alive[cls] -= 1
             rows.append(row)
         if rows:
             idx = jnp.asarray(np.asarray(rows, np.int32))
-            self._buf = self._buf.at[idx, self._dim + _DEAD].set(1.0)
-            self._n_dead += len(rows)
+            self.buf = self.buf.at[idx, self.dim + _DEAD].set(1.0)
+            self.n_dead += len(rows)
             self.stats.rows_tombstoned += len(rows)
+
+    def compact(self) -> None:
+        """Drop tombstoned rows with one on-device gather, preserving
+        the relative (global sequence) order of live rows."""
+        keep = np.nonzero(self.alive[:self.count])[0]
+        n = len(keep)
+        d = self.dim
+        gathered = jnp.take(self.buf, jnp.asarray(keep, jnp.int32),
+                            axis=0)
+        pad_rows = self.capacity - n
+        if pad_rows:
+            pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
+                .at[:, d + _DEAD].set(1.0)
+            self.buf = jnp.concatenate([gathered, pad], axis=0)
+        else:
+            self.buf = gathered
+        self.row_ids = [self.row_ids[i] for i in keep]
+        layers = np.zeros((self.capacity,), np.int32)
+        layers[:n] = self.row_layers[keep]
+        self.row_layers = layers
+        seqs = np.full((self.capacity,), _SEQ_PAD, np.int64)
+        seqs[:n] = self.row_seq[keep]
+        self.row_seq = seqs
+        alive = np.zeros((self.capacity,), bool)
+        alive[:n] = True
+        self.alive = alive
+        self.row_of = {nid: i for i, nid in enumerate(self.row_ids)}
+        self.count = n
+        self.n_dead = 0
+        self.stats.compactions += 1
+        self.stats.rows_compacted += n
+
+    def valid_count(self, layer_filter: Optional[str]) -> int:
+        if layer_filter == "leaf":
+            return self.n_alive["leaf"]
+        if layer_filter == "summary":
+            return self.n_alive["summary"]
+        return self.n_alive["leaf"] + self.n_alive["summary"]
+
+    def state_dict(self) -> dict:
+        return {
+            "buf": np.asarray(self.buf[:self.count]) if self.count
+            else np.zeros((0, self.dim + N_FLAGS), np.float32),
+            "row_ids": list(self.row_ids),
+            "row_layers": self.row_layers[:self.count].copy(),
+            "row_seq": self.row_seq[:self.count].copy(),
+            "alive": self.alive[:self.count].copy(),
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.reset()
+        ids = list(state["row_ids"])
+        n = len(ids)
+        if not n:
+            return
+        buf = np.asarray(state["buf"], np.float32)
+        if buf.shape != (n, self.dim + N_FLAGS):
+            raise ValueError(
+                f"snapshot buffer is {buf.shape}, store expects "
+                f"({n}, {self.dim + N_FLAGS}) — embed_dim mismatch or "
+                f"truncated state")
+        self._ensure_capacity(n)
+        self.buf = jax.lax.dynamic_update_slice(
+            self.buf, jnp.asarray(buf), (0, 0))
+        self.row_ids = ids
+        self.row_layers[:n] = np.asarray(state["row_layers"], np.int32)
+        self.row_seq[:n] = np.asarray(state["row_seq"], np.int64)
+        alive = np.asarray(state["alive"], bool)
+        self.alive[:n] = alive
+        self.count = n
+        self.n_dead = int(n - alive.sum())
+        for row, nid in enumerate(ids):
+            if alive[row]:
+                self.row_of[nid] = row
+                cls = "summary" if self.row_layers[row] > 0 else "leaf"
+                self.n_alive[cls] += 1
+
+
+def _filter_bias(layer_filter: Optional[str]) -> Tuple[float, ...]:
+    return (MASK_BIAS,
+            MASK_BIAS if layer_filter == "leaf" else 0.0,
+            MASK_BIAS if layer_filter == "summary" else 0.0)
+
+
+def _check_queries(queries: np.ndarray) -> np.ndarray:
+    q = np.asarray(queries, dtype=np.float32)
+    if q.ndim != 2:
+        raise ValueError(f"queries must be (B, d), got {q.shape}")
+    return q
+
+
+class _BaseStore:
+    """Delta-replay orchestration shared by both stores.
+
+    Subclasses define the shard set (``self._shards``) and the routing
+    function (``owner``); everything else — stale-resurrection
+    handling, per-version replay, threshold compaction, rebuild — is
+    identical by construction, which is what keeps the flat and
+    sharded stores bitwise-interchangeable."""
+
+    _shards: List[_Shard]
+    _store_stats: StoreStats       # refresh / rebuild counters
+
+    def __init__(self, graph, compact_threshold: float):
+        self._graph = graph
+        self._version = -1          # graph version the index reflects
+        self._next_seq = 0          # global row insertion order
+        self._compact_threshold = float(compact_threshold)
+
+    def owner(self, node_id: str) -> int:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # maintenance
+    # ------------------------------------------------------------------
+    def _append(self, ids: Sequence[str]) -> None:
+        if not ids:
+            return
+        if self._next_seq + len(ids) >= _SEQ_LIMIT:
+            self._renumber_seqs()
+        nodes = self._graph.nodes
+        buckets: Dict[int, Tuple[List[str], List[int]]] = {}
+        for nid in ids:
+            b_ids, b_seqs = buckets.setdefault(self.owner(nid),
+                                               ([], []))
+            b_ids.append(nid)
+            b_seqs.append(self._next_seq)
+            self._next_seq += 1
+        for s, (b_ids, b_seqs) in buckets.items():
+            self._shards[s].append(nodes, b_ids, b_seqs)
+
+    def _renumber_seqs(self) -> None:
+        """Compact the global sequence numbers to 0..n_rows-1,
+        preserving order.  Pure host-side metadata rewrite (seqs never
+        live on device), so the append path stays O(delta); runs once
+        per ~2^31 lifetime appends to keep the int32 merge exact."""
+        rows = [(int(sh.row_seq[r]), sh, r)
+                for sh in self._shards for r in range(sh.count)]
+        rows.sort(key=lambda t: t[0])
+        for new_seq, (_, sh, r) in enumerate(rows):
+            sh.row_seq[r] = new_seq
+        self._next_seq = len(rows)
+
+    def _tombstone(self, ids: Sequence[str]) -> None:
+        buckets: Dict[int, List[str]] = {}
+        for nid in ids:
+            buckets.setdefault(self.owner(nid), []).append(nid)
+        for s, b_ids in buckets.items():
+            self._shards[s].tombstone(b_ids)
 
     def _apply_delta(self, added: Sequence[str],
                      removed: Sequence[str]) -> None:
@@ -154,49 +376,24 @@ class VectorStore:
         # a re-added id (content-addressed resurrection) must move to
         # the buffer tail so row order keeps tracking the graph's node
         # insertion order (exact tie-break parity with a rebuild)
-        stale = [nid for nid in added if nid in self._row_of]
+        stale = [nid for nid in added
+                 if nid in self._shards[self.owner(nid)].row_of]
         if stale:
             self._tombstone(stale)
         self._append([nid for nid in added if nid in self._graph.nodes])
 
-    def _compact(self) -> None:
-        """Drop tombstoned rows with one on-device gather, preserving
-        the relative order of live rows."""
-        keep = np.nonzero(self._alive[:self._count])[0]
-        n = len(keep)
-        d = self._dim
-        gathered = jnp.take(self._buf, jnp.asarray(keep, jnp.int32),
-                            axis=0)
-        pad_rows = self._capacity - n
-        if pad_rows:
-            pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
-                .at[:, d + _DEAD].set(1.0)
-            self._buf = jnp.concatenate([gathered, pad], axis=0)
-        else:
-            self._buf = gathered
-        self._row_ids = [self._row_ids[i] for i in keep]
-        layers = np.zeros((self._capacity,), np.int32)
-        layers[:n] = self._row_layers[keep]
-        self._row_layers = layers
-        alive = np.zeros((self._capacity,), bool)
-        alive[:n] = True
-        self._alive = alive
-        self._row_of = {nid: i for i, nid in enumerate(self._row_ids)}
-        self._count = n
-        self._n_dead = 0
-        self.stats.compactions += 1
-        self.stats.rows_compacted += n
-
     def _full_rebuild(self) -> None:
-        self._reset_empty()
-        self.stats.full_rebuilds += 1
+        for sh in self._shards:
+            sh.reset()
+        self._next_seq = 0
+        self._store_stats.full_rebuilds += 1
         self._append(list(self._graph.nodes))
 
     def _refresh(self) -> None:
         g = self._graph
         if self._version == g.version:
             return
-        self.stats.refreshes += 1
+        self._store_stats.refreshes += 1
         deltas = g.deltas_since(self._version) \
             if hasattr(g, "deltas_since") else None
         if deltas is None:
@@ -204,16 +401,22 @@ class VectorStore:
         else:
             for added, removed in deltas:
                 self._apply_delta(added, removed)
-        if self._count and \
-                self._n_dead > self._compact_threshold * self._count:
-            self._compact()
+        for sh in self._shards:   # per-shard, independent compaction
+            if sh.count and \
+                    sh.n_dead > self._compact_threshold * sh.count:
+                sh.compact()
         self._version = g.version
+
+    def _valid_count(self, layer_filter: Optional[str]) -> int:
+        return sum(sh.valid_count(layer_filter)
+                   for sh in self._shards)
 
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
     def refresh(self) -> None:
-        """Bring the index up to the graph's version (delta replay)."""
+        """Bring the index up to the graph's version (delta replay,
+        routed to owning shards only)."""
         self._refresh()
 
     def rebuild(self) -> None:
@@ -221,17 +424,17 @@ class VectorStore:
         self._full_rebuild()
         self._version = self._graph.version
 
+    def compact(self) -> None:
+        """Force tombstone compaction on every shard that has any."""
+        self._refresh()
+        for sh in self._shards:
+            if sh.n_dead:
+                sh.compact()
+
     @property
     def size(self) -> int:
         self._refresh()
-        return self._count - self._n_dead
-
-    def _valid_count(self, layer_filter: Optional[str]) -> int:
-        if layer_filter == "leaf":
-            return self._n_alive["leaf"]
-        if layer_filter == "summary":
-            return self._n_alive["summary"]
-        return self._n_alive["leaf"] + self._n_alive["summary"]
+        return sum(sh.count - sh.n_dead for sh in self._shards)
 
     def search(self, query: np.ndarray, k: int,
                layer_filter: Optional[str] = None) -> List[Hit]:
@@ -242,29 +445,259 @@ class VectorStore:
     def search_batch(self, queries: np.ndarray, k: int,
                      layer_filter: Optional[str] = None
                      ) -> List[List[Hit]]:
+        raise NotImplementedError
+
+
+class VectorStore(_BaseStore):
+    """Single-buffer store: exactly one ``_Shard`` (everything routes
+    to shard 0), searched with a single kernel launch — no merge."""
+
+    def __init__(self, graph, *, compact_threshold: float = 0.25,
+                 min_capacity: int = 64):
+        super().__init__(graph, compact_threshold)
+        self.stats = StoreStats()
+        self._store_stats = self.stats   # one object, all counters
+        self._s = _Shard(graph.cfg.embed_dim,
+                         min_capacity=int(min_capacity),
+                         stats=self.stats)
+        self._shards = [self._s]
+
+    def owner(self, node_id: str) -> int:
+        return 0
+
+    def search_batch(self, queries: np.ndarray, k: int,
+                     layer_filter: Optional[str] = None
+                     ) -> List[List[Hit]]:
         """Per-query top-k hits for a (B, d) query batch in ONE kernel
         launch; row b of the result corresponds to ``queries[b]``."""
         self._refresh()
-        q = np.asarray(queries, dtype=np.float32)
-        if q.ndim != 2:
-            raise ValueError(f"queries must be (B, d), got {q.shape}")
+        q = _check_queries(queries)
         if q.shape[0] == 0:
             return []
-        n_valid = self._valid_count(layer_filter)
+        n_valid = self._s.valid_count(layer_filter)
         if n_valid == 0 or k <= 0:
             return [[] for _ in range(q.shape[0])]
         k_eff = min(k, n_valid)
-        bias = (MASK_BIAS,
-                MASK_BIAS if layer_filter == "leaf" else 0.0,
-                MASK_BIAS if layer_filter == "summary" else 0.0)
-        vals, idx = flagged_mips_topk(jnp.asarray(q), self._buf, k_eff,
-                                      bias)
+        vals, idx = flagged_mips_topk(jnp.asarray(q), self._s.buf,
+                                      k_eff, _filter_bias(layer_filter))
         vals = np.asarray(vals)
         idx = np.asarray(idx)
         out: List[List[Hit]] = []
         for b in range(q.shape[0]):
             out.append([
-                Hit(node_id=self._row_ids[int(r)], score=float(v),
-                    layer=int(self._row_layers[int(r)]))
+                Hit(node_id=self._s.row_ids[int(r)], score=float(v),
+                    layer=int(self._s.row_layers[int(r)]))
                 for v, r in zip(vals[b], idx[b])])
         return out
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Serializable snapshot of the synced buffer (host arrays).
+
+        Together with the graph's persisted delta-log tail this lets a
+        restart resume with O(delta) refreshes instead of a full O(N)
+        re-stack.
+        """
+        self._refresh()
+        return {
+            "kind": "flat",
+            "version": self._version,
+            "next_seq": self._next_seq,
+            "shard": self._s.state_dict(),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, graph, **kw) -> "VectorStore":
+        store = cls(graph, **kw)
+        store._s.load_state(state["shard"])
+        store._next_seq = int(state["next_seq"])
+        store._version = int(state["version"])
+        return store
+
+
+# ---------------------------------------------------------------------------
+# sharded store
+# ---------------------------------------------------------------------------
+
+class ShardedVectorStore(_BaseStore):
+    """Hash-sharded incremental index over the ``data`` mesh axis.
+
+    Same public API and bitwise-identical results as ``VectorStore``
+    (see the module docstring for the routing + merge design and its
+    invariants).  ``n_shards`` defaults to the mesh's data-axis size
+    (or the local device count); shard buffers are placed on devices
+    through the ``common/sharding.py`` rules engine when a mesh is
+    given, else on the default device.
+    """
+
+    def __init__(self, graph, *, n_shards: Optional[int] = None,
+                 mesh=None, compact_threshold: float = 0.25,
+                 min_capacity: int = 64, rules=None):
+        super().__init__(graph, compact_threshold)
+        if mesh is not None:
+            from repro.common.sharding import db_shard_axes, \
+                shard_placements
+            axes = db_shard_axes(mesh, rules)
+            if not axes:
+                raise ValueError(
+                    f"mesh axes {tuple(mesh.shape)} match none of the "
+                    f"rules' db_shards axes; refusing to silently "
+                    f"collapse the index onto one device")
+            if n_shards is None:
+                n_shards = 1
+                for a in axes:
+                    n_shards *= int(mesh.shape[a])
+        elif n_shards is None:
+            n_shards = max(1, len(jax.devices()))
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = int(n_shards)
+        self.mesh = mesh
+        if mesh is not None:
+            placements = shard_placements(mesh, self.n_shards,
+                                          rules=rules)
+        else:
+            placements = [None] * self.n_shards
+        dim = graph.cfg.embed_dim
+        self._shards = [_Shard(dim, device=p, min_capacity=min_capacity)
+                        for p in placements]
+        self._store_stats = StoreStats()  # refreshes / full_rebuilds
+
+    def owner(self, node_id: str) -> int:
+        return shard_of(node_id, self.n_shards)
+
+    @property
+    def stats(self) -> StoreStats:
+        """Aggregate counters: store-level refresh/rebuild counts plus
+        per-shard staging/tombstone/compaction sums."""
+        agg = StoreStats(**vars(self._store_stats))
+        for sh in self._shards:
+            agg.rows_staged += sh.stats.rows_staged
+            agg.rows_tombstoned += sh.stats.rows_tombstoned
+            agg.compactions += sh.stats.compactions
+            agg.rows_compacted += sh.stats.rows_compacted
+            agg.growths += sh.stats.growths
+        return agg
+
+    def shard_stats(self) -> List[StoreStats]:
+        return [sh.stats for sh in self._shards]
+
+    def shard_report(self) -> List[dict]:
+        """Per-shard health: live rows, dead-row ratio, staged rows."""
+        return [{
+            "rows": sh.count - sh.n_dead,
+            "dead": sh.n_dead,
+            "dead_ratio": sh.n_dead / max(1, sh.count),
+            "capacity": sh.capacity,
+            "staged": sh.stats.rows_staged,
+            "compactions": sh.stats.compactions,
+            "device": str(sh.device) if sh.device is not None else None,
+        } for sh in self._shards]
+
+    def search_batch(self, queries: np.ndarray, k: int,
+                     layer_filter: Optional[str] = None
+                     ) -> List[List[Hit]]:
+        """Per-shard ``flagged_mips_topk`` scans (one launch per shard
+        for the whole (B, d) block) + ``merge_sharded_topk``; bitwise
+        identical to the single-buffer store."""
+        self._refresh()
+        q = _check_queries(queries)
+        n_q = q.shape[0]
+        if n_q == 0:
+            return []
+        n_valid = self._valid_count(layer_filter)
+        if n_valid == 0 or k <= 0:
+            return [[] for _ in range(n_q)]
+        k_eff = min(k, n_valid)
+        bias = _filter_bias(layer_filter)
+        qj = jnp.asarray(q)
+        # pass 1 — dispatch every shard's scan WITHOUT syncing, so the
+        # per-device kernels run concurrently (async dispatch); the
+        # query block is transferred once per device (shards can share
+        # one), and k is capped by the shard's buffer height
+        q_on: Dict = {}
+        pending: List[Tuple[_Shard, int, jnp.ndarray, jnp.ndarray]] = []
+        for sh in self._shards:
+            if sh.count == 0:
+                continue
+            k_s = min(k_eff, sh.capacity)
+            if sh.device is None:
+                q_dev = qj
+            elif sh.device in q_on:
+                q_dev = q_on[sh.device]
+            else:
+                q_dev = q_on[sh.device] = jax.device_put(qj, sh.device)
+            v, i = flagged_mips_topk(q_dev, sh.buf, k_s, bias)
+            pending.append((sh, k_s, v, i))
+        # pass 2 — gather candidates to host, pad to k_eff with
+        # below-everything sentinels, and build the seq -> node map
+        val_blocks: List[np.ndarray] = []
+        seq_blocks: List[np.ndarray] = []
+        by_seq: Dict[int, Tuple[str, int]] = {}
+        for sh, k_s, v, i in pending:
+            v = np.asarray(v)
+            i = np.asarray(i)
+            seqs = sh.row_seq[i]
+            for local in np.unique(i):
+                local = int(local)
+                if local < sh.count:
+                    by_seq[int(sh.row_seq[local])] = (
+                        sh.row_ids[local], int(sh.row_layers[local]))
+            if k_s < k_eff:
+                padw = ((0, 0), (0, k_eff - k_s))
+                v = np.pad(v, padw, constant_values=_VAL_PAD)
+                seqs = np.pad(seqs, padw, constant_values=_SEQ_PAD)
+            val_blocks.append(v)
+            seq_blocks.append(seqs)
+        vals = jnp.asarray(np.stack(val_blocks))
+        # int32 is exact: _renumber_seqs keeps every seq < _SEQ_LIMIT
+        seqs = jnp.asarray(np.stack(seq_blocks).astype(np.int32))
+        mv, mi = merge_sharded_topk(vals, seqs, k_eff)
+        mv = np.asarray(mv)
+        mi = np.asarray(mi)
+        out: List[List[Hit]] = []
+        for b in range(n_q):
+            hits: List[Hit] = []
+            for v, s in zip(mv[b], mi[b]):
+                nid, layer = by_seq[int(s)]
+                hits.append(Hit(node_id=nid, score=float(v),
+                                layer=layer))
+            out.append(hits)
+        return out
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        self._refresh()
+        return {
+            "kind": "sharded",
+            "n_shards": self.n_shards,
+            "version": self._version,
+            "next_seq": self._next_seq,
+            "shards": [sh.state_dict() for sh in self._shards],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, graph, *, mesh=None,
+                   **kw) -> "ShardedVectorStore":
+        store = cls(graph, n_shards=int(state["n_shards"]), mesh=mesh,
+                    **kw)
+        for sh, sh_state in zip(store._shards, state["shards"]):
+            sh.load_state(sh_state)
+        store._next_seq = int(state["next_seq"])
+        store._version = int(state["version"])
+        return store
+
+
+AnyStore = Union[VectorStore, ShardedVectorStore]
+
+
+def store_from_state(state: dict, graph, *, mesh=None, **kw) -> AnyStore:
+    """Restore whichever store kind ``state`` was saved from."""
+    if state.get("kind") == "sharded":
+        return ShardedVectorStore.from_state(state, graph, mesh=mesh,
+                                             **kw)
+    return VectorStore.from_state(state, graph, **kw)

@@ -7,6 +7,12 @@ import jax
 import numpy as np
 
 
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # older releases: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
 @functools.lru_cache(None)
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"

@@ -70,9 +70,17 @@ def merge_sharded_topk(vals: jnp.ndarray, idx: jnp.ndarray,
     Used after an all_gather of per-shard candidates: k << N makes the
     gathered tensor tiny (s*k entries per query) so the collective cost
     is negligible next to the sharded scan.
+
+    Score ties are broken by the *smaller index* — not by flattened
+    (shard-major) candidate position — so when ``idx`` carries a global
+    ordering (row offsets, or the sharded store's insertion-sequence
+    numbers) the merged result is bitwise identical to a single
+    ``jax.lax.top_k`` over the unsharded DB, whose tie-break is also
+    lowest-index-first.
     """
     s, b, kk = vals.shape
     flat_v = jnp.swapaxes(vals, 0, 1).reshape(b, s * kk)
     flat_i = jnp.swapaxes(idx, 0, 1).reshape(b, s * kk)
-    v, pos = jax.lax.top_k(flat_v, k)
-    return v, jnp.take_along_axis(flat_i, pos, axis=1)
+    order = jnp.lexsort((flat_i, -flat_v), axis=-1)[:, :k]
+    return (jnp.take_along_axis(flat_v, order, axis=1),
+            jnp.take_along_axis(flat_i, order, axis=1))

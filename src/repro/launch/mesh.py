@@ -21,3 +21,13 @@ def make_local_mesh(n_devices: int | None = None, model: int = 1):
     n = n_devices or len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def local_data_mesh(min_devices: int = 2):
+    """1-D ``data`` mesh over the local devices, or ``None`` when
+    fewer than ``min_devices`` exist (callers degrade to default
+    placement).  The shared builder for benchmarks/tests/examples."""
+    n = len(jax.devices())
+    if n < min_devices:
+        return None
+    return jax.make_mesh((n,), ("data",))

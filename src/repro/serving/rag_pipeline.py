@@ -84,6 +84,16 @@ class RAGPipeline:
         self.reader = reader or ExtractiveReader()
         self.engine = engine  # optional LM reader
 
+    def index_report(self) -> dict:
+        """Serving-side index health: size + refresh counters, plus the
+        per-shard row/dead-ratio breakdown when the store is sharded
+        over the data mesh axis (dashboards / capacity planning)."""
+        store = self.rag.store
+        report = {"size": store.size, "stats": dict(vars(store.stats))}
+        if hasattr(store, "shard_report"):
+            report["shards"] = store.shard_report()
+        return report
+
     @staticmethod
     def _prompt(question: str, context: str) -> str:
         return f"Context:\n{context}\n\nQuestion: {question}\nAnswer:"

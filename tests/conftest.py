@@ -7,9 +7,51 @@ import pytest
 os.environ.pop("REPRO_UNROLL_SCANS", None)
 assert "--xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", ""), \
-    "tests must run with the real (single) device count"
+    "tests must not inherit a forced device count (dry-run leak?)"
+
+# ----------------------------------------------------------------------
+# forced multi-device host platform
+#
+# The sharded-store suite needs several devices; XLA only honors
+# --xla_force_host_platform_device_count if it is set before jax
+# initializes, which conftest import time guarantees (pytest imports
+# conftest before any test module).  The whole suite runs under the
+# forced count — single-device semantics are unchanged (computations
+# stay on device 0 unless explicitly placed).  REPRO_TEST_DEVICE_COUNT
+# overrides the count; on a real TPU backend the flag only affects the
+# (unused) host platform.
+# ----------------------------------------------------------------------
+TEST_DEVICE_COUNT = int(os.environ.get("REPRO_TEST_DEVICE_COUNT", "4"))
+if "jax" not in sys.modules and TEST_DEVICE_COUNT > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={TEST_DEVICE_COUNT}"
+    ).strip()
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip ``multidevice``-marked tests when the forced count did not
+    take (jax already initialized, or a single-chip accelerator)."""
+    import jax
+    if len(jax.devices()) >= 2:
+        return
+    skip = pytest.mark.skip(reason="needs >= 2 devices (forced host "
+                                   "platform unavailable)")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture
+def data_mesh():
+    """1-D mesh over every (forced-host or real) device, data axis."""
+    from repro.launch.mesh import local_data_mesh
+    mesh = local_data_mesh()
+    if mesh is None:
+        pytest.skip("needs a multi-device platform")
+    return mesh
 
 # ----------------------------------------------------------------------
 # optional-hypothesis shim

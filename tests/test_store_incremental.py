@@ -140,17 +140,84 @@ def test_store_size_tracks_graph():
     assert store.size == len(g.nodes)
 
 
-def test_from_state_store_falls_back_to_rebuild():
-    """A restored graph has no delta log: the store must detect the
-    gap and rebuild rather than serve a stale or partial index."""
+def test_from_state_replays_persisted_delta_log():
+    """state_dict now carries the delta-log tail: a fresh store on a
+    restored graph replays deltas instead of a blind full re-stack, and
+    stays correct."""
     g = EraGraph(CFG, _EMB)
     g.insert_chunks(_mk_chunks(8, 30))
     g2 = EraGraph.from_state(g.state_dict(), _EMB)
     store = VectorStore(g2)
     assert store.size == len(g2.nodes)
-    assert store.stats.full_rebuilds == 1
-    # subsequent inserts go back to the incremental path
+    assert store.stats.full_rebuilds == 0
+    # subsequent inserts stay on the incremental path
     g2.insert_chunks(_mk_chunks(9, 10))
     store.refresh()
+    assert store.stats.full_rebuilds == 0
+    _assert_matches_rebuild(g2, store, _queries(8))
+
+
+def test_from_state_without_log_falls_back_to_rebuild():
+    """Old snapshots (no ``delta_log`` key) still restore: the store
+    detects the log gap and rebuilds rather than serve a stale or
+    partial index."""
+    g = EraGraph(CFG, _EMB)
+    g.insert_chunks(_mk_chunks(8, 30))
+    state = g.state_dict()
+    del state["delta_log"]
+    g2 = EraGraph.from_state(state, _EMB)
+    store = VectorStore(g2)
+    assert store.size == len(g2.nodes)
     assert store.stats.full_rebuilds == 1
     _assert_matches_rebuild(g2, store, _queries(8))
+
+
+def test_store_ahead_of_graph_rebuilds_instead_of_ghosting():
+    """Snapshots taken at different times: a store restored at version
+    V+1 against a graph restored at version V must detect the
+    inconsistency and rebuild — never serve rows for nodes the older
+    graph does not contain (ghost hits would KeyError in retrieval)."""
+    g = EraGraph(CFG, _EMB)
+    g.insert_chunks(_mk_chunks(20, 20))
+    old_graph_state = g.state_dict()          # version V
+    g.insert_chunks(_mk_chunks(21, 15))       # version V+1
+    store = VectorStore(g)
+    newer_store_state = store.state_dict()
+
+    g_old = EraGraph.from_state(old_graph_state, _EMB)
+    restored = VectorStore.from_state(newer_store_state, g_old)
+    restored.refresh()
+    assert restored.stats.full_rebuilds == 1, restored.stats
+    assert restored.size == len(g_old.nodes)
+    for hits in restored.search_batch(_queries(20), 8):
+        for h in hits:
+            assert h.node_id in g_old.nodes
+
+
+def test_store_persistence_resumes_with_o_delta_refresh():
+    """ROADMAP "Delta-log persistence": a saved store + the graph's
+    persisted log tail let a restart refresh with O(delta) staged rows
+    — no full O(N) re-stack on the first post-restore refresh."""
+    corpus = SyntheticCorpus.generate(n_docs=60, n_topics=5, seed=0)
+    tok = HashTokenizer()
+    g = EraGraph(CFG, _EMB)
+    store = VectorStore(g)
+    g.insert_chunks(chunk_corpus(corpus.docs[:-1], tok,
+                                 CFG.chunk_tokens))
+    store.refresh()
+    n_before = store.size
+    graph_state = g.state_dict()
+    store_state = store.state_dict()
+
+    g2 = EraGraph.from_state(graph_state, _EMB)
+    restored = VectorStore.from_state(store_state, g2)
+    assert restored.stats.rows_staged == 0          # buffers restored
+    small = chunk_corpus(corpus.docs[-1:], tok, CFG.chunk_tokens)
+    rep = g2.insert_chunks(small)
+    restored.refresh()                # first post-restore refresh
+    staged = restored.stats.rows_staged
+    assert staged <= len(small) + rep.n_resummarized, \
+        (staged, len(small), rep.n_resummarized)
+    assert staged < 0.25 * n_before, (staged, n_before)
+    assert restored.stats.full_rebuilds == 0, restored.stats
+    _assert_matches_rebuild(g2, restored, _queries(10))

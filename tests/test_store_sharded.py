@@ -1,0 +1,276 @@
+"""Differential multi-device harness for the sharded vector store.
+
+The suite runs on the forced 4-host-device platform (conftest sets
+``--xla_force_host_platform_device_count`` before jax initializes) and
+asserts the ``ShardedVectorStore`` invariants from ``store.py``'s
+module docstring: bitwise search parity with the single-buffer store
+across insert / summary-churn / compaction sequences, delta locality
+(a single-document insert stages rows on exactly the owning shard),
+deterministic routing, and per-device buffer placement over the data
+mesh axis.
+"""
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.graph import EraGraph
+from repro.core.store import ShardedVectorStore, VectorStore, shard_of
+from repro.data.chunker import Chunk
+from repro.embed.hashing import HashingEmbedder
+
+CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
+                   max_layers=3, chunk_tokens=32)
+_EMB = HashingEmbedder(dim=CFG.embed_dim)
+_WORDS = ["alpha", "beta", "gamma", "delta", "epsilon", "zeta",
+          "eta", "theta", "iota", "kappa"]
+
+
+def _mk_chunks(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        words = [_WORDS[int(w)] for w in
+                 rng.integers(0, len(_WORDS), size=12)]
+        out.append(Chunk(chunk_id=f"c{seed}-{i:04d}",
+                         doc_id=f"d{i % 5}",
+                         text=f"Chunk {i} says " + " ".join(words) + ".",
+                         n_tokens=15))
+    return out
+
+
+def _queries(seed: int, n: int = 4) -> np.ndarray:
+    texts = [f"what does chunk {i} say about "
+             f"{_WORDS[i % len(_WORDS)]}?" for i in range(n)]
+    return _EMB.encode(texts)
+
+
+def _hits_key(hits):
+    return [(h.node_id, h.score, h.layer) for h in hits]
+
+
+def _assert_bitwise_equal(flat, sharded, queries, k=6):
+    for filt in (None, "leaf", "summary"):
+        a = flat.search_batch(queries, k, layer_filter=filt)
+        b = sharded.search_batch(queries, k, layer_filter=filt)
+        for ha, hb in zip(a, b):
+            assert _hits_key(ha) == _hits_key(hb), (filt, ha, hb)
+
+
+# ----------------------------------------------------------------------
+# differential parity on the forced mesh
+# ----------------------------------------------------------------------
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sharded_matches_flat_bitwise_over_growth(data_mesh, seed):
+    """Random insert interleavings (whose repartitions tombstone
+    replaced summaries): sharded results must equal the single-buffer
+    store bit-for-bit after every batch, for every layer filter."""
+    rng = np.random.default_rng(seed)
+    chunks = _mk_chunks(seed, 90)
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh)
+    queries = _queries(seed)
+    pos = 0
+    while pos < len(chunks):
+        bs = int(rng.integers(1, 20))
+        g.insert_chunks(chunks[pos:pos + bs])
+        pos += bs
+        _assert_bitwise_equal(flat, sharded, queries)
+    assert sharded.stats.full_rebuilds == 0, sharded.stats
+    assert sharded.stats.rows_tombstoned > 0, sharded.stats
+    # the sharded copy staged exactly what the flat store staged
+    assert sharded.stats.rows_staged == flat.stats.rows_staged
+
+
+@pytest.mark.multidevice
+def test_sharded_compaction_is_per_shard_and_invisible(data_mesh):
+    """An aggressive threshold forces per-shard compactions mid-stream;
+    results must stay bitwise-identical and other shards untouched."""
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g, compact_threshold=0.01)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh,
+                                 compact_threshold=0.01)
+    chunks = _mk_chunks(5, 80)
+    queries = _queries(5)
+    for i in range(0, len(chunks), 11):
+        g.insert_chunks(chunks[i:i + 11])
+        _assert_bitwise_equal(flat, sharded, queries)
+    assert sharded.stats.compactions > 0, sharded.stats
+    assert sharded.stats.full_rebuilds == 0, sharded.stats
+    # compaction happened only on shards that actually had tombstones
+    for st, rep in zip(sharded.shard_stats(), sharded.shard_report()):
+        if st.compactions == 0:
+            assert st.rows_compacted == 0
+
+
+@pytest.mark.multidevice
+def test_shard_buffers_live_on_distinct_mesh_devices(data_mesh):
+    """One shard per data-axis device: one buffer on each device."""
+    n_dev = data_mesh.shape["data"]
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=n_dev, mesh=data_mesh)
+    g.insert_chunks(_mk_chunks(2, 40))
+    sharded.refresh()
+    devices = set()
+    for sh in sharded._shards:
+        devs = sh.buf.devices() if hasattr(sh.buf, "devices") \
+            else {sh.buf.device()}
+        assert len(devs) == 1
+        devices.update(devs)
+    assert len(devices) == n_dev, devices
+
+
+def test_sharded_single_vs_batch_bitwise_identical():
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    g.insert_chunks(_mk_chunks(3, 60))
+    queries = _queries(3, n=7)
+    batched = sharded.search_batch(queries, 5)
+    looped = [sharded.search(q, 5) for q in queries]
+    for hb, hl in zip(batched, looped):
+        assert _hits_key(hb) == _hits_key(hl)
+
+
+# ----------------------------------------------------------------------
+# delta locality (acceptance criterion)
+# ----------------------------------------------------------------------
+
+def test_single_doc_insert_stages_rows_on_exactly_one_shard():
+    """A single-chunk document inserted into a one-layer graph adds one
+    node: exactly one shard's buffer stages a row, all others are
+    untouched (asserted via per-shard staged-row stats)."""
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    g.insert_chunks(_mk_chunks(10, 8))   # 8 leaves < s_max: no summary
+    sharded.refresh()
+    before = [st.rows_staged for st in sharded.shard_stats()]
+
+    g.insert_chunks(_mk_chunks(11, 1))   # the single-document insert
+    sharded.refresh()
+    staged = [st.rows_staged - b
+              for st, b in zip(sharded.shard_stats(), before)]
+    assert sum(staged) == 1, staged
+    assert sorted(staged) == [0, 0, 0, 1], staged
+    nid = _mk_chunks(11, 1)[0].chunk_id
+    assert staged[sharded.owner(nid)] == 1, (staged, sharded.owner(nid))
+
+
+def test_delta_staging_confined_to_owner_shards():
+    """In a deep graph an insert also churns summaries; staged rows
+    must land only on the shards owning the delta's ids, and sum to
+    exactly the delta size — shards outside the delta stage nothing."""
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    g.insert_chunks(_mk_chunks(12, 70))
+    sharded.refresh()
+    v0 = g.version
+    before = [st.rows_staged for st in sharded.shard_stats()]
+
+    g.insert_chunks(_mk_chunks(13, 1))
+    sharded.refresh()
+    (added, _removed), = g.deltas_since(v0)
+    owners = {sharded.owner(nid) for nid in added}
+    staged = [st.rows_staged - b
+              for st, b in zip(sharded.shard_stats(), before)]
+    assert sum(staged) == len(added), (staged, added)
+    for s, n in enumerate(staged):
+        if s not in owners:
+            assert n == 0, (s, staged, owners)
+
+
+@pytest.mark.multidevice
+def test_uneven_shard_count_round_robins_devices(data_mesh):
+    """An uneven shard count (n_dev + 1 shards on n_dev devices) must
+    not collapse to one device (that would put per-chip memory back at
+    O(N)): placement degrades to round-robin over the data axis."""
+    from repro.common.sharding import shard_placements
+    n_dev = data_mesh.shape["data"]
+    placements = shard_placements(data_mesh, n_dev + 1)
+    assert None not in placements
+    assert len(set(placements)) == n_dev
+    # divisible counts keep the balanced contiguous grouping
+    even = shard_placements(data_mesh, 2 * n_dev)
+    assert len(set(even)) == n_dev
+    assert all(even[2 * i] == even[2 * i + 1] for i in range(n_dev))
+    # fewer shards than devices: distinct devices, no degradation
+    solo = shard_placements(data_mesh, 1)
+    assert solo[0] is not None
+
+
+def test_routing_is_deterministic_and_total():
+    ids = [c.chunk_id for c in _mk_chunks(14, 50)]
+    for n_shards in (1, 2, 4, 7):
+        owners = [shard_of(nid, n_shards) for nid in ids]
+        assert owners == [shard_of(nid, n_shards) for nid in ids]
+        assert all(0 <= s < n_shards for s in owners)
+    # the hash actually spreads ids (not all in one bucket)
+    assert len({shard_of(nid, 4) for nid in ids}) == 4
+
+
+# ----------------------------------------------------------------------
+# edges
+# ----------------------------------------------------------------------
+
+def test_sharded_edge_cases_match_flat():
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    q = _queries(15, n=2)
+    # empty store
+    assert sharded.search_batch(q, 5) == [[], []]
+    assert sharded.size == 0
+    g.insert_chunks(_mk_chunks(15, 12))
+    # zero queries / k <= 0
+    assert sharded.search_batch(np.zeros((0, CFG.embed_dim)), 5) == []
+    assert sharded.search_batch(q, 0) == [[], []]
+    # k far beyond the corpus: both return exactly n_valid hits
+    a = flat.search_batch(q, 10_000)
+    b = sharded.search_batch(q, 10_000)
+    for ha, hb in zip(a, b):
+        assert _hits_key(ha) == _hits_key(hb)
+        assert len(hb) == sharded.size
+    with pytest.raises(ValueError):
+        sharded.search_batch(np.zeros((3,)), 5)
+    assert sharded.size == flat.size == len(g.nodes)
+
+
+def test_seq_renumbering_near_int32_limit_preserves_parity():
+    """The global sequence counter renumbers itself before reaching
+    the int32 merge range; relative order (the tie-break contract) and
+    flat/sharded parity must survive the rewrite."""
+    from repro.core import store as store_mod
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    g.insert_chunks(_mk_chunks(17, 40))
+    _assert_bitwise_equal(flat, sharded, _queries(17))
+    # push both counters to the brink: the next append must renumber
+    flat._next_seq = store_mod._SEQ_LIMIT - 1
+    sharded._next_seq = store_mod._SEQ_LIMIT - 1
+    g.insert_chunks(_mk_chunks(18, 20))
+    _assert_bitwise_equal(flat, sharded, _queries(17))
+    assert sharded._next_seq < store_mod._SEQ_LIMIT // 2
+    for sh in sharded._shards:
+        assert all(int(sh.row_seq[r]) < sharded._next_seq
+                   for r in range(sh.count))
+
+
+def test_sharded_state_roundtrip_preserves_results():
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    g.insert_chunks(_mk_chunks(16, 50))
+    sharded.refresh()
+    state = sharded.state_dict()
+    g2 = EraGraph.from_state(g.state_dict(), _EMB)
+    restored = ShardedVectorStore.from_state(state, g2)
+    assert restored.stats.full_rebuilds == 0
+    q = _queries(16)
+    for filt in (None, "leaf", "summary"):
+        a = sharded.search_batch(q, 6, layer_filter=filt)
+        b = restored.search_batch(q, 6, layer_filter=filt)
+        for ha, hb in zip(a, b):
+            assert _hits_key(ha) == _hits_key(hb)
+    # restore staged nothing: buffers came back from the snapshot
+    assert restored.stats.rows_staged == 0

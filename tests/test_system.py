@@ -123,12 +123,9 @@ def test_shard_map_retrieval_exact():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.kernels.common import shard_map
     from repro.kernels.mips_topk.ops import merge_sharded_topk, \
         mips_topk
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # older releases: experimental namespace
-        from jax.experimental.shard_map import shard_map
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",))
     rng = np.random.default_rng(0)
