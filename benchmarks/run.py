@@ -52,8 +52,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         suites.pop("roofline")
         suites["query_batch"] = lambda: query_batch.run(
             n_docs=24, batch_sizes=(1, 8))
+        # the dispatch sweep (collective vs loop at s in {1,4,8}) runs
+        # at smoke scale too, recording BENCH_sharded_query.json
         suites["sharded_store"] = lambda: sharded_store.run(
-            n_docs=24, batch=8)
+            n_docs=24, batch=8, shard_sweep=(1, 4, 8))
     return suites
 
 

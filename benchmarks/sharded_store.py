@@ -1,5 +1,6 @@
 """Sharded-store scaling: per-shard staging locality, dead-row ratios,
-parity, and batched-query throughput vs the single-buffer store.
+parity, batched-query throughput vs the single-buffer store, and the
+collective-vs-loop dispatch comparison.
 
 The row set is hash-sharded over however many devices exist (one 1-D
 data mesh; on CPU CI this is the forced host platform).  Reported per
@@ -9,13 +10,18 @@ parity row asserts sharded results match the single-buffer store
 exactly — the invariant the differential test suite enforces at
 commit time, re-checked here at benchmark scale.
 
-On the forced host platform the sharded QPS row is dominated by
-per-shard dispatch + host-side merge overhead at toy corpus scale; it
-is tracked for regressions, not as a speedup claim (the ROADMAP
-collective-launch item is the fix on real meshes).
+The ``collective_s{N}`` rows sweep the shard count and compare the
+single-launch collective query (one ``shard_map`` program) against the
+per-shard dispatch loop: host launch count (via the mips_topk launch
+counter) and wall-clock QPS, with loop-vs-collective parity asserted
+at every point.  The sweep is also written to
+``BENCH_sharded_query.json`` so the perf trajectory records across
+commits.  On the forced host platform absolute QPS is toy-scale; the
+launch counts and the collective/loop ratio are the tracked signals.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import List
 
@@ -23,6 +29,7 @@ import jax
 
 from benchmarks.common import SYSTEMS, bench_corpus, csv_row
 from repro.core.store import ShardedVectorStore
+from repro.kernels.mips_topk import ops as mips_ops
 from repro.launch.mesh import local_data_mesh
 
 
@@ -36,8 +43,66 @@ def _best_time(fn, repeats: int = 3) -> float:
     return best
 
 
+def _dispatch_sweep(graph, q, k: int, mesh, shard_sweep,
+                    out_json: str | None) -> List[str]:
+    """Collective vs per-shard-loop dispatch at each shard count:
+    launch count + best-of QPS, loop/collective parity asserted."""
+    rows: List[str] = []
+    report = {}
+    batch = int(q.shape[0])
+    for s in shard_sweep:
+        store = ShardedVectorStore(graph, n_shards=s, mesh=mesh)
+        store.refresh()
+        entry = {"collective": None, "loop": None}
+
+        def _measure(label):
+            mips_ops.reset_launch_count()
+            hits = store.search_batch(q, k)
+            launches = mips_ops.launch_count()
+            t = _best_time(lambda: store.search_batch(q, k))
+            entry[label] = {"launches": launches,
+                            "qps": batch / max(t, 1e-9),
+                            "us_per_query": 1e6 * t / batch}
+            return hits
+
+        coll_hits = None
+        if store.collective_active:
+            coll_hits = _measure("collective")
+        store.collective = False
+        loop_hits = _measure("loop")
+        if coll_hits is not None:
+            mismatch = sum(
+                [(h.node_id, h.score) for h in a]
+                != [(h.node_id, h.score) for h in b]
+                for a, b in zip(coll_hits, loop_hits))
+            assert mismatch == 0, \
+                f"collective != loop on {mismatch} queries at s={s}"
+        report[str(s)] = entry
+        coll, loop = entry["collective"], entry["loop"]
+        derived = (
+            f"coll_launches={coll['launches'] if coll else 'off'};"
+            f"loop_launches={loop['launches']};"
+            + (f"coll_qps={coll['qps']:.1f};" if coll else "")
+            + f"loop_qps={loop['qps']:.1f}")
+        # primary metric is the serving dispatch actually in use, so
+        # the trajectory stays meaningful on collective-off hosts
+        primary = (coll or loop)["us_per_query"]
+        rows.append(csv_row(f"sharded_store/collective_s{s}",
+                            primary, derived))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"batch": batch, "top_k": k,
+                       "n_devices": len(jax.devices()),
+                       "n_rows": len(graph.nodes),
+                       "sweep": report}, f, indent=2)
+            f.write("\n")
+    return rows
+
+
 def run(n_docs: int = 60, n_shards: int | None = None,
-        batch: int = 16) -> List[str]:
+        batch: int = 16, shard_sweep=(1, 4, 8),
+        out_json: str | None = "BENCH_sharded_query.json"
+        ) -> List[str]:
     n_dev = len(jax.devices())
     n_shards = n_shards or max(2, n_dev)
     mesh = local_data_mesh()
@@ -98,6 +163,10 @@ def run(n_docs: int = 60, n_shards: int | None = None,
         f"sharded_store/qps_b{batch}", 1e6 * t_shard / batch,
         f"sharded_qps={batch / max(t_shard, 1e-9):.1f};"
         f"flat_qps={batch / max(t_flat, 1e-9):.1f}"))
+
+    # collective vs per-shard-loop dispatch across shard counts
+    rows.extend(_dispatch_sweep(rag.graph, q, rag.cfg.top_k, mesh,
+                                shard_sweep, out_json))
     return rows
 
 

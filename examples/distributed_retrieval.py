@@ -7,7 +7,19 @@ scans its shard with the mips kernel path, and a tiny top-k merge
 produces exact global results.  The second half shows the *maintained*
 version of the same layout — ``ShardedVectorStore`` hash-routes the
 graph's per-version deltas to owning shards so corpus growth stays
-O(delta) per chip.
+O(delta) per chip, holding the shard buffers as ONE stacked
+``(n_shards, cap, d+flags)`` array over the data axis.
+
+With ``collective_query=True`` (``EraRAGConfig.collective_query``, the
+default; ``collective=`` on the store) the whole sharded query runs as
+a single jitted ``shard_map`` launch — per-device scan, candidate
+``all_gather``, lowest-sequence merge — instead of one host dispatch
+per shard; the loop stays available as the parity oracle and the
+automatic fallback on single-device meshes.  Maintenance is off the
+query path too: each ``refresh()`` compacts at most ONE over-threshold
+shard (round-robin), staging the gather in a double buffer that the
+next refresh swaps in, so queries between refreshes never absorb a
+full-buffer gather (``store.compact()`` force-drains everything).
 
     PYTHONPATH=src python examples/distributed_retrieval.py
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
@@ -90,6 +102,28 @@ def main() -> None:
           f"delta staged per shard {staged} (total "
           f"{sum(staged)} of {sharded.size} rows), exact parity with "
           f"the single-buffer store")
+
+    # --- collective single-launch query ------------------------------
+    from repro.kernels.mips_topk import ops as mips_ops
+    if sharded.collective_active:
+        mips_ops.reset_launch_count()
+        hits_coll = sharded.search_batch(queries, k)
+        n_coll = mips_ops.launch_count()
+        sharded.collective = False           # the parity oracle
+        mips_ops.reset_launch_count()
+        hits_loop = sharded.search_batch(queries, k)
+        n_loop = mips_ops.launch_count()
+        sharded.collective = True
+        assert all(
+            [(h.node_id, h.score) for h in a]
+            == [(h.node_id, h.score) for h in b]
+            for a, b in zip(hits_coll, hits_loop))
+        print(f"collective query: {n_coll} launch for the whole "
+              f"{sharded.n_shards}-shard scan+merge vs {n_loop} on "
+              f"the per-shard loop, bitwise-identical results")
+    else:
+        print("collective query auto-off (single-device mesh): "
+              "per-shard loop dispatch")
 
 
 if __name__ == "__main__":

@@ -251,6 +251,11 @@ class EraRAGConfig:
     # vector-index sharding over the data mesh axis: 1 = single-buffer
     # store, >1 = that many hash-routed shards, 0 = one per device
     index_shards: int = 1
+    # sharded-store query dispatch: True runs the whole sharded scan +
+    # merge as ONE shard_map launch over the stacked shard buffer
+    # (auto-disabled when no multi-device mesh is available); False
+    # keeps the per-shard dispatch loop (the parity oracle)
+    collective_query: bool = True
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):

@@ -194,6 +194,35 @@ def db_shard_axes(mesh: Mesh,
     return tuple(a for a in axes if a in mesh.shape)
 
 
+def db_axis_size(mesh: Mesh,
+                 rules: Optional[LogicalRules] = None) -> int:
+    """Device count along the ``db_shards`` axes (1 when the rules
+    replicate the shard dim or the mesh lacks those axes)."""
+    size = 1
+    for a in db_shard_axes(mesh, rules):
+        size *= int(mesh.shape[a])
+    return size
+
+
+def stacked_db_shardings(mesh: Mesh,
+                         rules: Optional[LogicalRules] = None
+                         ) -> Tuple[NamedSharding, NamedSharding]:
+    """``(buffer, seq-plane)`` NamedShardings for the stacked shard
+    index: the ``(S, cap, d+flags)`` buffer and its ``(S, cap)``
+    sequence plane put the slot dim over the ``db_shards`` axes and
+    replicate rows/features, so one ``shard_map`` launch can scan every
+    shard in place (see ``kernels/mips_topk/ops.sharded_mips_topk``).
+    """
+    axes = db_shard_axes(mesh, rules)
+    if not axes:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.shape)} resolve no db_shards axes; "
+            f"cannot lay out a stacked shard buffer")
+    lead = axes if len(axes) != 1 else axes[0]
+    return (NamedSharding(mesh, P(lead, None, None)),
+            NamedSharding(mesh, P(lead, None)))
+
+
 def mesh_axis_devices(mesh: Mesh, axes: Sequence[str]) -> List:
     """Ordered device list spanning ``axes`` of the mesh, taking one
     representative device (index 0) along every other mesh axis."""

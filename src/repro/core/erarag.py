@@ -28,11 +28,13 @@ def make_store(graph, cfg: EraRAGConfig, mesh=None) -> AnyStore:
     """cfg.index_shards: 1 -> single-buffer store (a mesh does not
     override an explicitly unsharded config); >1 -> that many
     hash-routed shards; 0 -> one shard per device / per data-axis
-    chip.  ``mesh`` places shard buffers over its data axis."""
+    chip.  ``mesh`` lays the stacked shard buffer over its data axis;
+    ``cfg.collective_query`` selects the single-launch sharded scan."""
     if cfg.index_shards == 1:
         return VectorStore(graph)
     return ShardedVectorStore(
-        graph, n_shards=cfg.index_shards or None, mesh=mesh)
+        graph, n_shards=cfg.index_shards or None, mesh=mesh,
+        collective=cfg.collective_query)
 
 
 class EraRAG:
@@ -108,7 +110,8 @@ class EraRAG:
         obj.graph = EraGraph.from_state(state, embedder, summarizer)
         if "store" in state:
             obj.store = store_from_state(state["store"], obj.graph,
-                                         mesh=mesh)
+                                         mesh=mesh,
+                                         collective=cfg.collective_query)
         else:
             obj.store = make_store(obj.graph, cfg, mesh)
         return obj

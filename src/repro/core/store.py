@@ -10,12 +10,13 @@ tombstoned in place.  Tombstones are masked at query time through the
 buffer's trailing indicator columns (``[emb | dead | summary | leaf]``)
 plus a per-query bias vector (``flagged_mips_topk``), which also serves
 layer filtering without any host-side row gathering.  When tombstones
-exceed ``compact_threshold`` of the buffer the store compacts with one
+exceed ``compact_threshold`` of a shard the store compacts it with one
 on-device gather, preserving row order so top-k tie-breaking stays
 bitwise-identical to a from-scratch rebuild.
 
-All buffer maintenance lives in one place, ``_Shard``: the
-single-buffer ``VectorStore`` is exactly one shard; the
+All buffer maintenance lives in one place: ``_Shard`` owns the host
+metadata and ``_StackedBuffers`` the device arrays — the single-buffer
+``VectorStore`` is exactly one shard over a one-slot group; the
 ``ShardedVectorStore`` is N of them behind hash routing — so growth,
 tombstoning, compaction, and persistence can never diverge between the
 two stores.
@@ -24,40 +25,62 @@ Sharded design (``ShardedVectorStore``)
 ---------------------------------------
 The row set is split over the ``data`` mesh axis: every node id is
 hash-routed (stable blake2 of the id, mod ``n_shards``) to one owning
-shard, and each shard keeps its own independently grown / tombstoned /
-compacted device buffer — so per-version deltas cost O(delta) *per
-shard*, per-chip memory is O(N / n_shards), and one hot shard compacts
-without touching the others.  Queries dispatch ``flagged_mips_topk``
-on every shard's buffer (async — the per-device scans overlap), then
-merge the per-shard candidates with the ``merge_sharded_topk``
-collective (s * k entries per query — tiny next to the sharded scan).
-Shard buffers are placed on devices via the ``common/sharding.py``
-rules engine (``retrieval_rules`` + ``shard_placements``), which falls
-back to replication on a single device, so the same store runs on a
-real mesh or on a forced host platform
-(``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+shard, so per-version deltas cost O(delta) *per shard* and per-chip
+memory stays O(N / n_shards).  The shard buffers live in ONE stacked
+``(n_shards, cap, d + N_FLAGS)`` device array whose slot dim is laid
+out over the ``db_shards`` mesh axes by the ``common/sharding.py``
+rules engine (``retrieval_rules`` + ``stacked_db_shardings``); slots
+grow in LOCKSTEP to a shared capacity, with padding rows carrying the
+dead flag (and a sentinel sequence number) so ``MASK_BIAS`` excludes
+them for free.  A shard count that does not divide the device count is
+padded up with permanently-empty slots rather than ever collapsing
+rows onto one device.
 
-Invariants (asserted by ``tests/test_store_sharded.py``):
+Queries run as ONE collective launch (``sharded_mips_topk``): a single
+``shard_map`` program scans every device's local slots with the
+flag-masked MIPS kernel, maps local rows to global sequence numbers
+through the on-device ``(n_shards, cap)`` seq plane, ``all_gather``s
+the tiny ``(s, b, k)`` candidate block, and merges with the
+lowest-sequence tie-break — no per-shard host dispatch, no host-side
+merge.  The per-shard dispatch loop (one ``mips_topk`` per shard plus
+a host-padded ``merge_sharded_topk``) remains as the differential
+parity oracle and the fallback, selected by ``collective=False`` or
+automatically when no multi-device mesh is available.
+
+Compaction is OFF the query path: ``refresh()`` commits at most one
+previously-scheduled shard compaction and schedules at most one new
+one (shards rotate round-robin; the rest are deferred and counted in
+``StoreStats.compactions_skipped``).  The scheduled gather lands in a
+double buffer that is swapped in at the NEXT refresh, so a query
+issued between refreshes never depends on a compaction gather —
+tombstoned rows are masked anyway, making the deferral bitwise
+invisible.  ``compact()`` stays as the forced, flush-everything escape
+hatch.
+
+Invariants (asserted by ``tests/test_store_sharded.py`` and
+``tests/test_store_collective.py``):
 
 - **routing determinism**: a node id's owning shard is a pure function
   of the id — the same corpus always shards the same way, across
-  processes and restarts.
+  processes and restarts (bulk paths route through one vectorized
+  blake2 pass that bypasses the small LRU instead of thrashing it).
 - **global order parity**: every appended row carries a monotone global
   sequence number (graph node-creation order); within a shard, row
   order is always a subsequence of it (compaction preserves relative
-  order), and the merge collective breaks score ties by lowest
-  sequence.  Sharded ``search``/``search_batch`` results are therefore
-  *bitwise identical* to the single-buffer store and to a from-scratch
-  rebuild.
-- **delta locality**: a delta only touches the buffers of the shards
+  order), and the merge — host-side or in-collective — breaks score
+  ties by lowest sequence.  Sharded ``search``/``search_batch``
+  results are therefore *bitwise identical* to the single-buffer store
+  and to a from-scratch rebuild, on either dispatch path.
+- **lockstep growth**: all shard slots share one capacity after any
+  delta replay — the precondition for the stacked collective scan.
+- **delta locality**: a delta only touches the slots of the shards
   that own its ids; all other shards stage zero rows.
 
-Queries are batched end-to-end: ``search_batch`` issues ONE
-``mips_topk`` launch per shard for a ``(B, d)`` query block; ``search``
-is the B=1 special case.  ``stats`` counts refreshes, staged rows,
-tombstones and compactions (aggregated over shards for the sharded
-store; ``shard_report`` exposes the per-shard breakdown) so tests and
-benchmarks can assert the O(delta) maintenance claim.  Both stores
+Queries are batched end-to-end: ``search_batch`` serves a ``(B, d)``
+query block in one launch (collective) or one launch per shard
+(fallback); ``search`` is the B=1 special case.  ``stats`` counts
+refreshes, staged rows, tombstones, compactions (committed, and
+skipped by the rotation), and routing-cache hits/misses; both stores
 serialize with ``state_dict``/``from_state`` — paired with the graph's
 persisted delta-log tail, a restored store resumes incrementally
 instead of paying a full O(N) re-stack.
@@ -66,6 +89,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import logging
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -73,8 +97,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mips_topk.ops import MASK_BIAS, flagged_mips_topk, \
-    merge_sharded_topk
+from repro.kernels.mips_topk.ops import MASK_BIAS, augment_queries, \
+    flagged_mips_topk, merge_sharded_topk, mips_topk, sharded_mips_topk
+
+logger = logging.getLogger(__name__)
 
 # trailing indicator columns of the device buffer
 N_FLAGS = 3
@@ -106,44 +132,329 @@ class StoreStats:
     full_rebuilds: int = 0
     rows_staged: int = 0       # host rows uploaded to the device buffer
     rows_tombstoned: int = 0
-    compactions: int = 0
+    compactions: int = 0       # committed double-buffer swaps
+    compactions_skipped: int = 0  # over-threshold shards deferred by
+    # the one-shard-per-refresh rotation (they compact on a later turn)
     rows_compacted: int = 0
     growths: int = 0
+    # id-routing cache movement since the store existed (the cache
+    # itself is process-global — see routing_cache_info)
+    route_hits: int = 0
+    route_misses: int = 0
+    bulk_routed: int = 0
 
 
-@functools.lru_cache(maxsize=1 << 16)
-def shard_of(node_id: str, n_shards: int) -> int:
+# ---------------------------------------------------------------------------
+# id routing
+# ---------------------------------------------------------------------------
+
+_ROUTE_LRU_SIZE = 1 << 16
+# at/above this many ids, routing bypasses the LRU: a full replay of a
+# >65k-id corpus would otherwise evict every useful entry (pure-miss
+# thrash) while paying the cache bookkeeping on top of the hashing
+_BULK_ROUTE_MIN = 4096
+
+_bulk_routed = 0  # ids routed via the LRU-bypass bulk pass
+
+
+def _route(node_id: str, n_shards: int) -> int:
     """Stable owning shard of a node id (pure content hash — identical
-    across processes, restarts, and PYTHONHASHSEED).  A small LRU
-    absorbs the delta path asking for the same id up to three times
-    (stale check, tombstone routing, append routing) without pinning
-    the whole corpus's ids for the process lifetime."""
+    across processes, restarts, and PYTHONHASHSEED)."""
     h = hashlib.blake2b(node_id.encode(), digest_size=8).digest()
     return int.from_bytes(h, "big") % n_shards
 
 
-class _Shard:
-    """One device-resident buffer: geometric growth, tombstone column,
-    order-preserving compaction, persistence.
+# A small LRU absorbs the delta path asking for the same id up to three
+# times (stale check, tombstone routing, append routing) without
+# pinning the whole corpus's ids for the process lifetime; bulk paths
+# go around it (shard_of_many).
+shard_of = functools.lru_cache(maxsize=_ROUTE_LRU_SIZE)(_route)
 
-    The single-buffer store is exactly one of these; the sharded store
-    is N of them behind hash routing.  Each row carries a global
-    sequence number (node-creation order) so cross-shard top-k ties
-    merge exactly like a single buffer's row-index tie-break."""
 
-    def __init__(self, dim: int, *, device=None, min_capacity: int = 64,
+def shard_of_many(ids: Sequence[str], n_shards: int) -> np.ndarray:
+    """Route an id batch in one pass.
+
+    Small batches (the O(delta) incremental path) go through the
+    ``shard_of`` LRU; batches at/above ``_BULK_ROUTE_MIN`` (full
+    rebuilds / replays) bypass it — one blake2 sweep over the ids, then
+    a single vectorized big-endian reduce + mod — so bulk routing never
+    thrashes the cache the hot path depends on.
+    """
+    global _bulk_routed
+    ids = list(ids)
+    if len(ids) < _BULK_ROUTE_MIN:
+        return np.fromiter((shard_of(i, n_shards) for i in ids),
+                           np.int64, count=len(ids))
+    _bulk_routed += len(ids)
+    raw = b"".join(hashlib.blake2b(i.encode(), digest_size=8).digest()
+                   for i in ids)
+    h = np.frombuffer(raw, dtype=">u8")
+    return (h % np.uint64(n_shards)).astype(np.int64)
+
+
+def routing_cache_info() -> Dict[str, int]:
+    """Hit/miss visibility for the process-global routing LRU."""
+    info = shard_of.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "size": info.currsize, "maxsize": info.maxsize,
+            "bulk_routed": _bulk_routed}
+
+
+# ---------------------------------------------------------------------------
+# stacked device buffers (jitted helpers pinned to the stack's sharding)
+# ---------------------------------------------------------------------------
+
+def _pin(sharding) -> dict:
+    return {} if sharding is None else {"out_shardings": sharding}
+
+
+@functools.lru_cache(maxsize=None)
+def _grow_buf_fn(sharding, pad_rows: int, dim: int):
+    def grow(buf):
+        pad_shape = buf.shape[:-2] + (pad_rows, buf.shape[-1])
+        pad = jnp.zeros(pad_shape, jnp.float32) \
+            .at[..., dim + _DEAD].set(1.0)
+        return jnp.concatenate([buf, pad], axis=-2)
+    return jax.jit(grow, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _grow_seq_fn(sharding, pad_rows: int):
+    def grow(seq):
+        pad = jnp.full(seq.shape[:-1] + (pad_rows,), int(_SEQ_PAD),
+                       jnp.int32)
+        return jnp.concatenate([seq, pad], axis=-1)
+    return jax.jit(grow, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _write_rows_fn(sharding, flat2d: bool):
+    def write(buf, block, slot, row0):
+        if flat2d:
+            return jax.lax.dynamic_update_slice(buf, block, (row0, 0))
+        return jax.lax.dynamic_update_slice(buf, block[None],
+                                            (slot, row0, 0))
+    return jax.jit(write, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _mark_dead_fn(sharding, flat2d: bool, dim: int):
+    def mark(buf, rows, slot):
+        if flat2d:
+            return buf.at[rows, dim + _DEAD].set(1.0)
+        return buf.at[slot, rows, dim + _DEAD].set(1.0)
+    return jax.jit(mark, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _compact_buf_fn(flat2d: bool, dim: int):
+    # produces a STANDALONE compacted slice (the double buffer) — it is
+    # swapped into the stack only at commit time, so queries dispatched
+    # between refreshes never depend on this gather
+    def compacted(buf, keep, slot):
+        sl = buf if flat2d else buf[slot]
+        out = jnp.zeros_like(sl).at[..., dim + _DEAD].set(1.0)
+        return jax.lax.dynamic_update_slice(
+            out, jnp.take(sl, keep, axis=0), (0, 0))
+    return jax.jit(compacted)
+
+
+@functools.lru_cache(maxsize=None)
+def _compact_seq_fn():
+    def compacted(seq, keep, slot):
+        sl = seq[slot]
+        out = jnp.full_like(sl, int(_SEQ_PAD))
+        return jax.lax.dynamic_update_slice(
+            out, jnp.take(sl, keep, axis=0), (0,))
+    return jax.jit(compacted)
+
+
+@functools.lru_cache(maxsize=None)
+def _commit_buf_fn(sharding, flat2d: bool):
+    def commit(buf, new_slice, slot):
+        if flat2d:
+            return new_slice
+        return jax.lax.dynamic_update_slice(buf, new_slice[None],
+                                            (slot, 0, 0))
+    return jax.jit(commit, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _commit_seq_fn(sharding):
+    def commit(seq, new_slice, slot):
+        return jax.lax.dynamic_update_slice(seq, new_slice[None],
+                                            (slot, 0))
+    return jax.jit(commit, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _write_seq_fn(sharding):
+    def write(seq, block, slot, row0):
+        return jax.lax.dynamic_update_slice(seq, block[None],
+                                            (slot, row0))
+    return jax.jit(write, **_pin(sharding))
+
+
+class _StackedBuffers:
+    """Device side of the store: ONE stacked ``(S, cap, d + N_FLAGS)``
+    buffer (plus an optional ``(S, cap)`` int32 global-sequence plane
+    for the collective query) whose slots grow in LOCKSTEP — every slot
+    always has the same capacity, and padding rows carry the dead flag
+    (and ``_SEQ_PAD``) so ``MASK_BIAS`` excludes them for free.
+
+    With a mesh the slot dim is laid out over the ``db_shards`` axes
+    via a ``NamedSharding`` (every mutation helper pins its output to
+    the same sharding, so the layout survives update chains) and the
+    whole stack is one collectively-scannable array.  The single-buffer
+    store is the ``S == 1`` case, held 2-D so its hot path needs no
+    per-query slicing.
+    """
+
+    def __init__(self, n_slots: int, dim: int, *, sharding=None,
+                 seq_sharding=None, min_capacity: int = 64,
+                 track_seqs: bool = False,
                  stats: Optional[StoreStats] = None):
-        self.dim = dim
-        self.device = device
+        self.n_slots = int(n_slots)
+        self.dim = int(dim)
+        self.sharding = sharding
+        self.seq_sharding = seq_sharding
         self.min_capacity = int(min_capacity)
+        self.track_seqs = bool(track_seqs)
         self.stats = stats if stats is not None else StoreStats()
+        self._flat2d = self.n_slots == 1 and sharding is None
         self.reset()
 
     def reset(self) -> None:
         self.capacity = 0
+        self.buf = None   # (S, cap, d+F) | (cap, d+F) when _flat2d
+        self.seq = None   # (S, cap) int32 when track_seqs
+        self._views: Dict[int, Tuple[int, jnp.ndarray]] = {}
+        self._version = 0
+
+    def _mutated(self) -> None:
+        self._version += 1
+
+    def _put(self, arr: np.ndarray, sharding):
+        if sharding is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, sharding)
+
+    def ensure(self, need: int) -> None:
+        """Lockstep geometric growth: every slot reaches the same new
+        capacity in one allocation (padding rows pre-flagged dead)."""
+        if need <= self.capacity:
+            return
+        cap = max(self.min_capacity, self.capacity)
+        while cap < need:
+            cap *= 2
+        d = self.dim
+        lead = () if self._flat2d else (self.n_slots,)
+        if self.buf is None:
+            base = np.zeros(lead + (cap, d + N_FLAGS), np.float32)
+            base[..., d + _DEAD] = 1.0
+            self.buf = self._put(base, self.sharding)
+            if self.track_seqs:
+                self.seq = self._put(
+                    np.full(lead + (cap,), _SEQ_PAD, np.int32),
+                    self.seq_sharding)
+        else:
+            pad = cap - self.capacity
+            self.buf = _grow_buf_fn(self.sharding, pad, d)(self.buf)
+            if self.track_seqs:
+                self.seq = _grow_seq_fn(self.seq_sharding,
+                                        pad)(self.seq)
+        self.capacity = cap
+        self.stats.growths += 1
+        self._mutated()
+
+    def write_rows(self, slot: int, row0: int, block: np.ndarray,
+                   seqs: Optional[np.ndarray] = None) -> None:
+        self.buf = _write_rows_fn(self.sharding, self._flat2d)(
+            self.buf, block, np.int32(slot), np.int32(row0))
+        if self.track_seqs and seqs is not None:
+            self.seq = _write_seq_fn(self.seq_sharding)(
+                self.seq, np.asarray(seqs, np.int32), np.int32(slot),
+                np.int32(row0))
+        self._mutated()
+
+    def upload_seqs(self, slot: int, seqs: np.ndarray) -> None:
+        """Re-stamp a slot's sequence prefix (renumbering support)."""
+        if not self.track_seqs or len(seqs) == 0:
+            return
+        self.seq = _write_seq_fn(self.seq_sharding)(
+            self.seq, np.asarray(seqs, np.int32), np.int32(slot),
+            np.int32(0))
+        self._mutated()
+
+    def mark_dead(self, slot: int, rows: np.ndarray) -> None:
+        self.buf = _mark_dead_fn(self.sharding, self._flat2d,
+                                 self.dim)(
+            self.buf, np.asarray(rows, np.int32), np.int32(slot))
+        self._mutated()
+
+    def compact_gather(self, slot: int, keep: np.ndarray):
+        """Dispatch the order-preserving gather into a DOUBLE BUFFER
+        (standalone slice arrays); the stack is untouched until
+        ``commit_compacted`` swaps them in."""
+        keep = np.asarray(keep, np.int32)
+        buf_slice = _compact_buf_fn(self._flat2d, self.dim)(
+            self.buf, keep, np.int32(slot))
+        seq_slice = None
+        if self.track_seqs:
+            seq_slice = _compact_seq_fn()(self.seq, keep,
+                                          np.int32(slot))
+        return buf_slice, seq_slice
+
+    def commit_compacted(self, slot: int, compacted) -> None:
+        buf_slice, seq_slice = compacted
+        self.buf = _commit_buf_fn(self.sharding, self._flat2d)(
+            self.buf, buf_slice, np.int32(slot))
+        if self.track_seqs and seq_slice is not None:
+            self.seq = _commit_seq_fn(self.seq_sharding)(
+                self.seq, seq_slice, np.int32(slot))
+        self._mutated()
+
+    def slice_view(self, slot: int) -> jnp.ndarray:
+        """Per-slot 2-D view for the per-shard fallback scan, memoized
+        per mutation version (the collective path never materializes
+        these; the flat store's view is the buffer itself)."""
+        if self._flat2d:
+            return self.buf
+        cached = self._views.get(slot)
+        if cached is not None and cached[0] == self._version:
+            return cached[1]
+        view = self.buf[slot]
+        self._views[slot] = (self._version, view)
+        return view
+
+    def read_rows(self, slot: int, n: int) -> np.ndarray:
+        if n == 0:
+            return np.zeros((0, self.dim + N_FLAGS), np.float32)
+        sl = self.buf if self._flat2d else self.buf[slot]
+        return np.asarray(sl[:n])
+
+
+class _Shard:
+    """Host metadata + maintenance for one slot of a
+    ``_StackedBuffers`` group: id <-> row maps, layers, global
+    sequence numbers, alive bits.  Device work (lockstep growth, slice
+    updates, tombstone flags, double-buffered compaction gathers) is
+    delegated to the group, so the flat and sharded stores can never
+    diverge.  Each row carries a global sequence number (node-creation
+    order) so cross-shard top-k ties merge exactly like a single
+    buffer's row-index tie-break."""
+
+    def __init__(self, dim: int, group: _StackedBuffers, slot: int, *,
+                 stats: Optional[StoreStats] = None):
+        self.dim = dim
+        self.group = group
+        self.slot = slot
+        self.stats = stats if stats is not None else StoreStats()
+        self.reset()
+
+    def reset(self) -> None:
         self.count = 0              # rows in use, tombstones included
         self.n_dead = 0
-        self.buf: Optional[jnp.ndarray] = None  # (cap, d + N_FLAGS)
         self.row_ids: List[str] = []
         self.row_layers = np.zeros((0,), np.int32)
         self.row_seq = np.zeros((0,), np.int64)  # global order
@@ -151,32 +462,29 @@ class _Shard:
         self.row_of: Dict[str, int] = {}
         self.n_alive = {"leaf": 0, "summary": 0}
 
-    def _ensure_capacity(self, extra: int) -> None:
-        need = self.count + extra
-        if need <= self.capacity:
+    @property
+    def capacity(self) -> int:
+        return self.group.capacity
+
+    @property
+    def buf(self) -> jnp.ndarray:
+        """This shard's (cap, d+F) buffer view (fallback-scan path)."""
+        return self.group.slice_view(self.slot)
+
+    def _grow_host(self, need: int) -> None:
+        have = len(self.row_layers)
+        if need <= have:
             return
-        cap = max(self.min_capacity, self.capacity)
-        while cap < need:
-            cap *= 2
-        pad_rows = cap - self.capacity
-        d = self.dim
-        # unused capacity rows carry the dead flag so the kernel can
-        # scan the full buffer with stable shapes between growths
-        pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
-            .at[:, d + _DEAD].set(1.0)
-        if self.buf is None:
-            self.buf = pad if self.device is None \
-                else jax.device_put(pad, self.device)
-        else:
-            self.buf = jnp.concatenate([self.buf, pad], axis=0)
+        n = max(self.group.min_capacity, have)
+        while n < need:
+            n *= 2
+        pad = n - have
         self.row_layers = np.concatenate(
-            [self.row_layers, np.zeros((pad_rows,), np.int32)])
+            [self.row_layers, np.zeros((pad,), np.int32)])
         self.row_seq = np.concatenate(
-            [self.row_seq, np.full((pad_rows,), _SEQ_PAD, np.int64)])
+            [self.row_seq, np.full((pad,), _SEQ_PAD, np.int64)])
         self.alive = np.concatenate(
-            [self.alive, np.zeros((pad_rows,), bool)])
-        self.capacity = cap
-        self.stats.growths += 1
+            [self.alive, np.zeros((pad,), bool)])
 
     def append(self, nodes: dict, ids: Sequence[str],
                seqs: Sequence[int]) -> None:
@@ -186,8 +494,10 @@ class _Shard:
             return
         m = len(ids)
         d = self.dim
-        self._ensure_capacity(m)
+        self.group.ensure(self.count + m)   # lockstep growth
+        self._grow_host(self.count + m)
         block = np.zeros((m, d + N_FLAGS), np.float32)
+        seq_arr = np.zeros((m,), np.int64)
         for j, (nid, seq) in enumerate(zip(ids, seqs)):
             node = nodes[nid]
             block[j, :d] = node.embedding
@@ -197,16 +507,30 @@ class _Shard:
             self.row_ids.append(nid)
             self.row_layers[row] = node.layer
             self.row_seq[row] = seq
+            seq_arr[j] = seq
             self.alive[row] = True
             self.row_of[nid] = row
             self.n_alive[cls] += 1
-        self.buf = jax.lax.dynamic_update_slice(
-            self.buf, jnp.asarray(block), (self.count, 0))
+        self.group.write_rows(self.slot, self.count, block, seq_arr)
         self.count += m
         self.stats.rows_staged += m
 
-    def tombstone(self, ids: Sequence[str]) -> None:
+    def seqs_at(self, rows: np.ndarray) -> np.ndarray:
+        """Global sequence numbers for kernel-returned row indices.
+
+        The scan covers the full LOCKSTEP capacity, so it can return
+        padding rows past this shard's own staged prefix (another
+        shard's append may have grown the group); size the host arrays
+        up first so those rows resolve to the ``_SEQ_PAD`` sentinel
+        instead of walking off the end."""
+        self._grow_host(self.capacity)
+        return self.row_seq[rows]
+
+    def tombstone(self, ids: Sequence[str]) -> List[int]:
+        """Flag rows dead in place; returns the retired global
+        sequence numbers (the store drops them from its seq map)."""
         rows = []
+        seqs: List[int] = []
         for nid in ids:
             row = self.row_of.pop(nid, None)
             if row is None or not self.alive[row]:
@@ -215,35 +539,33 @@ class _Shard:
             cls = "summary" if self.row_layers[row] > 0 else "leaf"
             self.n_alive[cls] -= 1
             rows.append(row)
+            seqs.append(int(self.row_seq[row]))
         if rows:
-            idx = jnp.asarray(np.asarray(rows, np.int32))
-            self.buf = self.buf.at[idx, self.dim + _DEAD].set(1.0)
+            self.group.mark_dead(self.slot, np.asarray(rows, np.int32))
             self.n_dead += len(rows)
             self.stats.rows_tombstoned += len(rows)
+        return seqs
 
-    def compact(self) -> None:
-        """Drop tombstoned rows with one on-device gather, preserving
-        the relative (global sequence) order of live rows."""
+    # -- compaction: schedule (gather into double buffer) / commit ----
+    def schedule_compact(self):
+        """Dispatch the order-preserving gather of live rows into a
+        double buffer; the swap happens at ``commit_compact`` (the next
+        refresh), so no query issued in between depends on it."""
         keep = np.nonzero(self.alive[:self.count])[0]
+        return keep, self.group.compact_gather(self.slot, keep)
+
+    def commit_compact(self, keep: np.ndarray, compacted) -> None:
+        self.group.commit_compacted(self.slot, compacted)
         n = len(keep)
-        d = self.dim
-        gathered = jnp.take(self.buf, jnp.asarray(keep, jnp.int32),
-                            axis=0)
-        pad_rows = self.capacity - n
-        if pad_rows:
-            pad = jnp.zeros((pad_rows, d + N_FLAGS), jnp.float32) \
-                .at[:, d + _DEAD].set(1.0)
-            self.buf = jnp.concatenate([gathered, pad], axis=0)
-        else:
-            self.buf = gathered
         self.row_ids = [self.row_ids[i] for i in keep]
-        layers = np.zeros((self.capacity,), np.int32)
+        size = len(self.row_layers)
+        layers = np.zeros((size,), np.int32)
         layers[:n] = self.row_layers[keep]
         self.row_layers = layers
-        seqs = np.full((self.capacity,), _SEQ_PAD, np.int64)
+        seqs = np.full((size,), _SEQ_PAD, np.int64)
         seqs[:n] = self.row_seq[keep]
         self.row_seq = seqs
-        alive = np.zeros((self.capacity,), bool)
+        alive = np.zeros((size,), bool)
         alive[:n] = True
         self.alive = alive
         self.row_of = {nid: i for i, nid in enumerate(self.row_ids)}
@@ -251,6 +573,11 @@ class _Shard:
         self.n_dead = 0
         self.stats.compactions += 1
         self.stats.rows_compacted += n
+
+    def compact_now(self) -> None:
+        """Forced, inline compaction (``compact()`` escape hatch)."""
+        keep, compacted = self.schedule_compact()
+        self.commit_compact(keep, compacted)
 
     def valid_count(self, layer_filter: Optional[str]) -> int:
         if layer_filter == "leaf":
@@ -261,8 +588,7 @@ class _Shard:
 
     def state_dict(self) -> dict:
         return {
-            "buf": np.asarray(self.buf[:self.count]) if self.count
-            else np.zeros((0, self.dim + N_FLAGS), np.float32),
+            "buf": self.group.read_rows(self.slot, self.count),
             "row_ids": list(self.row_ids),
             "row_layers": self.row_layers[:self.count].copy(),
             "row_seq": self.row_seq[:self.count].copy(),
@@ -281,12 +607,12 @@ class _Shard:
                 f"snapshot buffer is {buf.shape}, store expects "
                 f"({n}, {self.dim + N_FLAGS}) — embed_dim mismatch or "
                 f"truncated state")
-        self._ensure_capacity(n)
-        self.buf = jax.lax.dynamic_update_slice(
-            self.buf, jnp.asarray(buf), (0, 0))
+        self.group.ensure(n)
+        self._grow_host(n)
         self.row_ids = ids
         self.row_layers[:n] = np.asarray(state["row_layers"], np.int32)
         self.row_seq[:n] = np.asarray(state["row_seq"], np.int64)
+        self.group.write_rows(self.slot, 0, buf, self.row_seq[:n])
         alive = np.asarray(state["alive"], bool)
         self.alive[:n] = alive
         self.count = n
@@ -314,13 +640,15 @@ def _check_queries(queries: np.ndarray) -> np.ndarray:
 class _BaseStore:
     """Delta-replay orchestration shared by both stores.
 
-    Subclasses define the shard set (``self._shards``) and the routing
-    function (``owner``); everything else — stale-resurrection
-    handling, per-version replay, threshold compaction, rebuild — is
-    identical by construction, which is what keeps the flat and
-    sharded stores bitwise-interchangeable."""
+    Subclasses define the shard set (``self._shards``), the device
+    group (``self._group``), and the routing function (``owner`` /
+    ``owner_many``); everything else — stale-resurrection handling,
+    per-version replay, the rotating off-query-path compaction,
+    rebuild — is identical by construction, which is what keeps the
+    flat and sharded stores bitwise-interchangeable."""
 
     _shards: List[_Shard]
+    _group: _StackedBuffers
     _store_stats: StoreStats       # refresh / rebuild counters
 
     def __init__(self, graph, compact_threshold: float):
@@ -328,9 +656,20 @@ class _BaseStore:
         self._version = -1          # graph version the index reflects
         self._next_seq = 0          # global row insertion order
         self._compact_threshold = float(compact_threshold)
+        # merged-candidate id resolution for the sharded paths
+        self._seq_map: Dict[int, Tuple[str, int]] = {}
+        self._track_seq_map = False
+        # rotating, double-buffered compaction state
+        self._pending: Optional[Tuple[int, np.ndarray, tuple]] = None
+        self._compact_rr = 0
 
     def owner(self, node_id: str) -> int:
         raise NotImplementedError
+
+    def owner_many(self, ids: Sequence[str]) -> np.ndarray:
+        ids = list(ids)
+        return np.fromiter((self.owner(i) for i in ids), np.int64,
+                           count=len(ids))
 
     # ------------------------------------------------------------------
     # maintenance
@@ -341,34 +680,56 @@ class _BaseStore:
         if self._next_seq + len(ids) >= _SEQ_LIMIT:
             self._renumber_seqs()
         nodes = self._graph.nodes
+        owners = self.owner_many(ids)
         buckets: Dict[int, Tuple[List[str], List[int]]] = {}
-        for nid in ids:
-            b_ids, b_seqs = buckets.setdefault(self.owner(nid),
-                                               ([], []))
+        for nid, s in zip(ids, owners):
+            b_ids, b_seqs = buckets.setdefault(int(s), ([], []))
             b_ids.append(nid)
             b_seqs.append(self._next_seq)
+            if self._track_seq_map:
+                self._seq_map[self._next_seq] = (
+                    nid, int(nodes[nid].layer))
             self._next_seq += 1
         for s, (b_ids, b_seqs) in buckets.items():
             self._shards[s].append(nodes, b_ids, b_seqs)
 
     def _renumber_seqs(self) -> None:
         """Compact the global sequence numbers to 0..n_rows-1,
-        preserving order.  Pure host-side metadata rewrite (seqs never
-        live on device), so the append path stays O(delta); runs once
-        per ~2^31 lifetime appends to keep the int32 merge exact."""
+        preserving order, then re-stamp the device seq planes and the
+        seq map.  Runs once per ~2^31 lifetime appends to keep the
+        int32 merge exact; the host rewrite is O(N) metadata but the
+        device upload is one slice write per shard."""
         rows = [(int(sh.row_seq[r]), sh, r)
                 for sh in self._shards for r in range(sh.count)]
         rows.sort(key=lambda t: t[0])
         for new_seq, (_, sh, r) in enumerate(rows):
             sh.row_seq[r] = new_seq
         self._next_seq = len(rows)
+        if self._group.track_seqs:
+            for sh in self._shards:
+                self._group.upload_seqs(sh.slot,
+                                        sh.row_seq[:sh.count])
+        if self._track_seq_map:
+            self._rebuild_seq_map()
+
+    def _rebuild_seq_map(self) -> None:
+        self._seq_map.clear()
+        for sh in self._shards:
+            for r in range(sh.count):
+                if sh.alive[r]:
+                    self._seq_map[int(sh.row_seq[r])] = (
+                        sh.row_ids[r], int(sh.row_layers[r]))
 
     def _tombstone(self, ids: Sequence[str]) -> None:
+        if not ids:
+            return
+        owners = self.owner_many(ids)
         buckets: Dict[int, List[str]] = {}
-        for nid in ids:
-            buckets.setdefault(self.owner(nid), []).append(nid)
+        for nid, s in zip(ids, owners):
+            buckets.setdefault(int(s), []).append(nid)
         for s, b_ids in buckets.items():
-            self._shards[s].tombstone(b_ids)
+            for seq in self._shards[s].tombstone(b_ids):
+                self._seq_map.pop(seq, None)
 
     def _apply_delta(self, added: Sequence[str],
                      removed: Sequence[str]) -> None:
@@ -383,16 +744,52 @@ class _BaseStore:
         self._append([nid for nid in added if nid in self._graph.nodes])
 
     def _full_rebuild(self) -> None:
+        self._pending = None   # stale double buffer: drop, never swap
+        self._group.reset()
         for sh in self._shards:
             sh.reset()
+        self._seq_map.clear()
         self._next_seq = 0
         self._store_stats.full_rebuilds += 1
         self._append(list(self._graph.nodes))
 
-    def _refresh(self) -> None:
+    def _commit_pending_compaction(self) -> None:
+        if self._pending is None:
+            return
+        s, keep, compacted = self._pending
+        self._pending = None
+        self._shards[s].commit_compact(keep, compacted)
+
+    def _schedule_threshold_compaction(self) -> None:
+        """Schedule at most ONE over-threshold shard per refresh
+        (round-robin rotation); the rest are deferred to later turns
+        and surfaced in ``StoreStats.compactions_skipped``."""
+        thresh = self._compact_threshold
+        over = [i for i, sh in enumerate(self._shards)
+                if sh.count and sh.n_dead > thresh * sh.count]
+        if not over:
+            return
+        n = len(self._shards)
+        pick = min(over, key=lambda i: (i - self._compact_rr) % n)
+        self._compact_rr = (pick + 1) % n
+        self._store_stats.compactions_skipped += len(over) - 1
+        keep, compacted = self._shards[pick].schedule_compact()
+        self._pending = (pick, keep, compacted)
+
+    def _refresh(self, force_commit: bool = False) -> None:
         g = self._graph
         if self._version == g.version:
+            # version-synced queries take this hot path: they never
+            # commit (or depend on) a staged compaction — only an
+            # explicit refresh()/compact() swaps the double buffer in
+            if force_commit:
+                self._commit_pending_compaction()
             return
+        # a replay turn swaps in the previously staged compaction
+        # FIRST: the gather had a full inter-refresh window to
+        # complete, and the delta replay below must see the committed
+        # row layout
+        self._commit_pending_compaction()
         self._store_stats.refreshes += 1
         deltas = g.deltas_since(self._version) \
             if hasattr(g, "deltas_since") else None
@@ -401,10 +798,7 @@ class _BaseStore:
         else:
             for added, removed in deltas:
                 self._apply_delta(added, removed)
-        for sh in self._shards:   # per-shard, independent compaction
-            if sh.count and \
-                    sh.n_dead > self._compact_threshold * sh.count:
-                sh.compact()
+        self._schedule_threshold_compaction()
         self._version = g.version
 
     def _valid_count(self, layer_filter: Optional[str]) -> int:
@@ -416,8 +810,9 @@ class _BaseStore:
     # ------------------------------------------------------------------
     def refresh(self) -> None:
         """Bring the index up to the graph's version (delta replay,
-        routed to owning shards only)."""
-        self._refresh()
+        routed to owning shards only); commits at most one pending
+        compaction and schedules at most one new one."""
+        self._refresh(force_commit=True)
 
     def rebuild(self) -> None:
         """Force a from-scratch re-stack (tests/benchmarks baseline)."""
@@ -425,11 +820,19 @@ class _BaseStore:
         self._version = self._graph.version
 
     def compact(self) -> None:
-        """Force tombstone compaction on every shard that has any."""
-        self._refresh()
+        """Forced escape hatch: flush the pending double buffer and
+        compact EVERY shard that has tombstones, inline."""
+        self._refresh(force_commit=True)
+        self._commit_pending_compaction()
         for sh in self._shards:
             if sh.n_dead:
-                sh.compact()
+                sh.compact_now()
+
+    @property
+    def pending_compaction(self) -> Optional[int]:
+        """Shard index whose compaction is staged in the double buffer
+        (swapped in at the next refresh), or None."""
+        return self._pending[0] if self._pending is not None else None
 
     @property
     def size(self) -> int:
@@ -449,17 +852,20 @@ class _BaseStore:
 
 
 class VectorStore(_BaseStore):
-    """Single-buffer store: exactly one ``_Shard`` (everything routes
-    to shard 0), searched with a single kernel launch — no merge."""
+    """Single-buffer store: exactly one ``_Shard`` over a one-slot
+    group (everything routes to shard 0), searched with a single
+    kernel launch — no merge."""
 
     def __init__(self, graph, *, compact_threshold: float = 0.25,
                  min_capacity: int = 64):
         super().__init__(graph, compact_threshold)
         self.stats = StoreStats()
         self._store_stats = self.stats   # one object, all counters
-        self._s = _Shard(graph.cfg.embed_dim,
-                         min_capacity=int(min_capacity),
-                         stats=self.stats)
+        dim = graph.cfg.embed_dim
+        self._group = _StackedBuffers(1, dim,
+                                      min_capacity=int(min_capacity),
+                                      stats=self.stats)
+        self._s = _Shard(dim, self._group, 0, stats=self.stats)
         self._shards = [self._s]
 
     def owner(self, node_id: str) -> int:
@@ -525,53 +931,93 @@ class ShardedVectorStore(_BaseStore):
     """Hash-sharded incremental index over the ``data`` mesh axis.
 
     Same public API and bitwise-identical results as ``VectorStore``
-    (see the module docstring for the routing + merge design and its
-    invariants).  ``n_shards`` defaults to the mesh's data-axis size
-    (or the local device count); shard buffers are placed on devices
-    through the ``common/sharding.py`` rules engine when a mesh is
-    given, else on the default device.
+    (see the module docstring for the stacked-buffer + collective
+    launch design and its invariants).  ``n_shards`` defaults to the
+    mesh's data-axis size (or the local device count); the stacked
+    shard buffer is laid out over the ``db_shards`` axes through the
+    ``common/sharding.py`` rules engine when a mesh is given, else it
+    lives on the default device.  ``collective`` selects the
+    single-launch ``shard_map`` query (auto-disabled when the mesh
+    degrades to one device or none is given); ``collective=False``
+    keeps the per-shard dispatch loop as the parity oracle.
     """
 
     def __init__(self, graph, *, n_shards: Optional[int] = None,
                  mesh=None, compact_threshold: float = 0.25,
-                 min_capacity: int = 64, rules=None):
+                 min_capacity: int = 64, rules=None,
+                 collective: bool = True):
         super().__init__(graph, compact_threshold)
+        axes: Tuple[str, ...] = ()
+        axis_size = 1
         if mesh is not None:
-            from repro.common.sharding import db_shard_axes, \
-                shard_placements
+            from repro.common.sharding import db_axis_size, \
+                db_shard_axes, shard_placements, stacked_db_shardings
             axes = db_shard_axes(mesh, rules)
             if not axes:
                 raise ValueError(
                     f"mesh axes {tuple(mesh.shape)} match none of the "
                     f"rules' db_shards axes; refusing to silently "
                     f"collapse the index onto one device")
+            axis_size = db_axis_size(mesh, rules)
             if n_shards is None:
-                n_shards = 1
-                for a in axes:
-                    n_shards *= int(mesh.shape[a])
+                n_shards = axis_size
         elif n_shards is None:
             n_shards = max(1, len(jax.devices()))
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = int(n_shards)
         self.mesh = mesh
-        if mesh is not None:
-            placements = shard_placements(mesh, self.n_shards,
-                                          rules=rules)
-        else:
-            placements = [None] * self.n_shards
+        self._axis_names = axes
+        self._collective_capable = mesh is not None and axis_size > 1
+        self.collective = bool(collective)
+        self._store_stats = StoreStats()
         dim = graph.cfg.embed_dim
-        self._shards = [_Shard(dim, device=p, min_capacity=min_capacity)
-                        for p in placements]
-        self._store_stats = StoreStats()  # refreshes / full_rebuilds
+        if mesh is not None:
+            # the stacked slot dim must divide the shard axes: pad with
+            # permanently-empty slots (all rows dead-flagged) rather
+            # than ever collapsing rows onto one device
+            n_slots = -(-self.n_shards // axis_size) * axis_size
+            if n_slots != self.n_shards:
+                logger.warning(
+                    "ShardedVectorStore: %d shards padded to %d slots "
+                    "to divide the %d-device %s axes", self.n_shards,
+                    n_slots, axis_size, axes)
+            sharding, seq_sharding = stacked_db_shardings(mesh, rules)
+            self._placements = shard_placements(
+                mesh, n_slots, rules=rules)[:self.n_shards]
+        else:
+            n_slots = self.n_shards
+            sharding = seq_sharding = None
+            self._placements = [None] * self.n_shards
+        self._group = _StackedBuffers(
+            n_slots, dim, sharding=sharding, seq_sharding=seq_sharding,
+            min_capacity=int(min_capacity),
+            track_seqs=self._collective_capable,
+            stats=self._store_stats)
+        self._shards = [_Shard(dim, self._group, s)
+                        for s in range(self.n_shards)]
+        self._track_seq_map = True
+        # routing counters are process-global; report deltas since this
+        # store existed so its stats aren't another store's traffic
+        self._route_base = routing_cache_info()
 
     def owner(self, node_id: str) -> int:
         return shard_of(node_id, self.n_shards)
 
+    def owner_many(self, ids: Sequence[str]) -> np.ndarray:
+        return shard_of_many(ids, self.n_shards)
+
+    @property
+    def collective_active(self) -> bool:
+        """Whether ``search_batch`` runs as one collective launch."""
+        return self.collective and self._collective_capable
+
     @property
     def stats(self) -> StoreStats:
-        """Aggregate counters: store-level refresh/rebuild counts plus
-        per-shard staging/tombstone/compaction sums."""
+        """Aggregate counters: store-level refresh/rebuild/compaction-
+        rotation counts, per-shard staging/tombstone/compaction sums,
+        and routing-cache hit/miss movement since this store existed
+        (the cache is process-global; deltas keep attribution)."""
         agg = StoreStats(**vars(self._store_stats))
         for sh in self._shards:
             agg.rows_staged += sh.stats.rows_staged
@@ -579,6 +1025,12 @@ class ShardedVectorStore(_BaseStore):
             agg.compactions += sh.stats.compactions
             agg.rows_compacted += sh.stats.rows_compacted
             agg.growths += sh.stats.growths
+        route = routing_cache_info()
+        agg.route_hits = route["hits"] - self._route_base["hits"]
+        agg.route_misses = \
+            route["misses"] - self._route_base["misses"]
+        agg.bulk_routed = \
+            route["bulk_routed"] - self._route_base["bulk_routed"]
         return agg
 
     def shard_stats(self) -> List[StoreStats]:
@@ -586,6 +1038,7 @@ class ShardedVectorStore(_BaseStore):
 
     def shard_report(self) -> List[dict]:
         """Per-shard health: live rows, dead-row ratio, staged rows."""
+        pending = self.pending_compaction
         return [{
             "rows": sh.count - sh.n_dead,
             "dead": sh.n_dead,
@@ -593,15 +1046,17 @@ class ShardedVectorStore(_BaseStore):
             "capacity": sh.capacity,
             "staged": sh.stats.rows_staged,
             "compactions": sh.stats.compactions,
-            "device": str(sh.device) if sh.device is not None else None,
-        } for sh in self._shards]
+            "compact_pending": pending == s,
+            "device": str(self._placements[s])
+            if self._placements[s] is not None else None,
+        } for s, sh in enumerate(self._shards)]
 
     def search_batch(self, queries: np.ndarray, k: int,
                      layer_filter: Optional[str] = None
                      ) -> List[List[Hit]]:
-        """Per-shard ``flagged_mips_topk`` scans (one launch per shard
-        for the whole (B, d) block) + ``merge_sharded_topk``; bitwise
-        identical to the single-buffer store."""
+        """One collective ``sharded_mips_topk`` launch (default), or
+        the per-shard dispatch loop + host merge when the collective is
+        off; both bitwise identical to the single-buffer store."""
         self._refresh()
         q = _check_queries(queries)
         n_q = q.shape[0]
@@ -612,39 +1067,44 @@ class ShardedVectorStore(_BaseStore):
             return [[] for _ in range(n_q)]
         k_eff = min(k, n_valid)
         bias = _filter_bias(layer_filter)
-        qj = jnp.asarray(q)
-        # pass 1 — dispatch every shard's scan WITHOUT syncing, so the
-        # per-device kernels run concurrently (async dispatch); the
-        # query block is transferred once per device (shards can share
-        # one), and k is capped by the shard's buffer height
-        q_on: Dict = {}
+        if self.collective_active:
+            mv, ms = sharded_mips_topk(
+                jnp.asarray(q), self._group.buf, self._group.seq,
+                min(k_eff, self._group.capacity), k_eff, bias,
+                mesh=self.mesh, axis_names=self._axis_names)
+        else:
+            mv, ms = self._loop_dispatch(q, k_eff, bias)
+        mv = np.asarray(mv)
+        ms = np.asarray(ms)
+        out: List[List[Hit]] = []
+        for b in range(n_q):
+            hits: List[Hit] = []
+            for v, s in zip(mv[b], ms[b]):
+                nid, layer = self._seq_map[int(s)]
+                hits.append(Hit(node_id=nid, score=float(v),
+                                layer=layer))
+            out.append(hits)
+        return out
+
+    def _loop_dispatch(self, q: np.ndarray, k_eff: int,
+                       bias: Tuple[float, ...]):
+        """Per-shard fallback/oracle: one ``mips_topk`` launch per
+        non-empty shard (async dispatch — the scans overlap; the
+        augmented query block is built ONCE for the whole loop), then
+        host-side sentinel padding + ``merge_sharded_topk``."""
+        q_aug = augment_queries(jnp.asarray(q), bias)
         pending: List[Tuple[_Shard, int, jnp.ndarray, jnp.ndarray]] = []
         for sh in self._shards:
             if sh.count == 0:
                 continue
             k_s = min(k_eff, sh.capacity)
-            if sh.device is None:
-                q_dev = qj
-            elif sh.device in q_on:
-                q_dev = q_on[sh.device]
-            else:
-                q_dev = q_on[sh.device] = jax.device_put(qj, sh.device)
-            v, i = flagged_mips_topk(q_dev, sh.buf, k_s, bias)
+            v, i = mips_topk(q_aug, sh.buf, k_s)
             pending.append((sh, k_s, v, i))
-        # pass 2 — gather candidates to host, pad to k_eff with
-        # below-everything sentinels, and build the seq -> node map
         val_blocks: List[np.ndarray] = []
         seq_blocks: List[np.ndarray] = []
-        by_seq: Dict[int, Tuple[str, int]] = {}
         for sh, k_s, v, i in pending:
             v = np.asarray(v)
-            i = np.asarray(i)
-            seqs = sh.row_seq[i]
-            for local in np.unique(i):
-                local = int(local)
-                if local < sh.count:
-                    by_seq[int(sh.row_seq[local])] = (
-                        sh.row_ids[local], int(sh.row_layers[local]))
+            seqs = sh.seqs_at(np.asarray(i))
             if k_s < k_eff:
                 padw = ((0, 0), (0, k_eff - k_s))
                 v = np.pad(v, padw, constant_values=_VAL_PAD)
@@ -654,18 +1114,7 @@ class ShardedVectorStore(_BaseStore):
         vals = jnp.asarray(np.stack(val_blocks))
         # int32 is exact: _renumber_seqs keeps every seq < _SEQ_LIMIT
         seqs = jnp.asarray(np.stack(seq_blocks).astype(np.int32))
-        mv, mi = merge_sharded_topk(vals, seqs, k_eff)
-        mv = np.asarray(mv)
-        mi = np.asarray(mi)
-        out: List[List[Hit]] = []
-        for b in range(n_q):
-            hits: List[Hit] = []
-            for v, s in zip(mv[b], mi[b]):
-                nid, layer = by_seq[int(s)]
-                hits.append(Hit(node_id=nid, score=float(v),
-                                layer=layer))
-            out.append(hits)
-        return out
+        return merge_sharded_topk(vals, seqs, k_eff)
 
     # ------------------------------------------------------------------
     # persistence
@@ -687,6 +1136,7 @@ class ShardedVectorStore(_BaseStore):
                     **kw)
         for sh, sh_state in zip(store._shards, state["shards"]):
             sh.load_state(sh_state)
+        store._rebuild_seq_map()
         store._next_seq = int(state["next_seq"])
         store._version = int(state["version"])
         return store
@@ -700,4 +1150,5 @@ def store_from_state(state: dict, graph, *, mesh=None, **kw) -> AnyStore:
     if state.get("kind") == "sharded":
         return ShardedVectorStore.from_state(state, graph, mesh=mesh,
                                              **kw)
+    kw.pop("collective", None)   # flat store has no dispatch modes
     return VectorStore.from_state(state, graph, **kw)

@@ -13,6 +13,25 @@ except AttributeError:  # older releases: experimental namespace
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_collective(f, mesh, in_specs, out_specs,
+                         check_rep: bool = False):
+    """``shard_map`` with version-portable axis-name plumbing.
+
+    Collective kernel entry points (e.g. the single-launch sharded
+    top-k scan) route through this shim instead of calling
+    ``shard_map`` directly: the replication-check kwarg was renamed
+    across jax releases (``check_rep`` -> ``check_vma``), and the
+    collectives inside the mapped programs (``all_gather`` + merge)
+    trip the strict checker on some versions, so it defaults off.
+    """
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=check_rep)
+    except TypeError:  # jax >= 0.6 renamed the kwarg
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=check_rep)
+
+
 @functools.lru_cache(None)
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"

@@ -23,11 +23,16 @@ def make_local_mesh(n_devices: int | None = None, model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
-def local_data_mesh(min_devices: int = 2):
+def local_data_mesh(min_devices: int = 2,
+                    n_devices: int | None = None):
     """1-D ``data`` mesh over the local devices, or ``None`` when
     fewer than ``min_devices`` exist (callers degrade to default
-    placement).  The shared builder for benchmarks/tests/examples."""
-    n = len(jax.devices())
-    if n < min_devices:
+    placement).  ``n_devices`` builds over just the first N devices —
+    how tests exercise the degraded single-device mesh that auto-
+    disables the collective query path.  The shared builder for
+    benchmarks/tests/examples."""
+    n_avail = len(jax.devices())
+    n = n_devices or n_avail
+    if n_avail < max(min_devices, n):
         return None
-    return jax.make_mesh((n,), ("data",))
+    return jax.make_mesh((n,), ("data",), devices=jax.devices()[:n])

@@ -92,6 +92,11 @@ class RAGPipeline:
         report = {"size": store.size, "stats": dict(vars(store.stats))}
         if hasattr(store, "shard_report"):
             report["shards"] = store.shard_report()
+            # dispatch mode + rotating-compaction state: a dashboard
+            # can tell one-launch collective serving from the fallback
+            # loop, and see which shard's swap is staged off-path
+            report["collective_query"] = store.collective_active
+            report["pending_compaction"] = store.pending_compaction
         return report
 
     @staticmethod

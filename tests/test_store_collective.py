@@ -1,0 +1,383 @@
+"""Differential suite for the single-launch collective sharded query
+and the off-query-path (rotating, double-buffered) compaction.
+
+Runs on the forced 4-host-device platform (see conftest).  Asserts the
+new ``core/store.py`` contracts:
+
+- ``collective_query=True`` results are bitwise identical to the
+  per-shard dispatch loop AND the flat ``VectorStore`` across appends,
+  tombstones, layer-filter biases, and compaction;
+- the collective ``search_batch`` issues exactly ONE jitted launch
+  (via the ``kernels/mips_topk/ops`` launch counter);
+- lockstep growth: all shard capacities are equal after any delta
+  replay (the stacked-scan precondition);
+- ``refresh()`` compacts at most one shard per call (rotation), the
+  gather lands in a double buffer swapped at the NEXT refresh, and the
+  deferred shards are surfaced in ``StoreStats.compactions_skipped``;
+- the collective auto-disables on a degraded single-device mesh.
+"""
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.graph import EraGraph
+from repro.core.store import ShardedVectorStore, VectorStore
+from repro.core import store as store_mod
+from repro.data.chunker import Chunk
+from repro.embed.hashing import HashingEmbedder
+from repro.kernels.mips_topk import ops as mips_ops
+
+CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
+                   max_layers=3, chunk_tokens=32)
+_EMB = HashingEmbedder(dim=CFG.embed_dim)
+_WORDS = ["alpha", "beta", "gamma", "delta", "epsilon", "zeta",
+          "eta", "theta", "iota", "kappa"]
+
+
+def _mk_chunks(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        words = [_WORDS[int(w)] for w in
+                 rng.integers(0, len(_WORDS), size=12)]
+        out.append(Chunk(chunk_id=f"c{seed}-{i:04d}",
+                         doc_id=f"d{i % 5}",
+                         text=f"Chunk {i} says " + " ".join(words) + ".",
+                         n_tokens=15))
+    return out
+
+
+def _queries(seed: int, n: int = 4) -> np.ndarray:
+    texts = [f"what does chunk {i} say about "
+             f"{_WORDS[i % len(_WORDS)]}?" for i in range(n)]
+    return _EMB.encode(texts)
+
+
+def _hits_key(hits):
+    return [(h.node_id, h.score, h.layer) for h in hits]
+
+
+def _both_paths(sharded, queries, k, filt):
+    assert sharded.collective_active
+    coll = sharded.search_batch(queries, k, layer_filter=filt)
+    sharded.collective = False
+    loop = sharded.search_batch(queries, k, layer_filter=filt)
+    sharded.collective = True
+    return coll, loop
+
+
+# ----------------------------------------------------------------------
+# bitwise parity: collective == loop == flat
+# ----------------------------------------------------------------------
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("seed", [0, 1])
+def test_collective_matches_loop_and_flat_bitwise(data_mesh, seed):
+    """Random insert interleavings (whose repartitions tombstone
+    replaced summaries) with an aggressive compaction threshold: after
+    every batch, the one-launch collective, the per-shard loop, and
+    the flat store must agree bit-for-bit for every layer filter."""
+    rng = np.random.default_rng(seed)
+    chunks = _mk_chunks(seed, 90)
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g, compact_threshold=0.05)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh,
+                                 compact_threshold=0.05)
+    queries = _queries(seed)
+    pos = 0
+    while pos < len(chunks):
+        bs = int(rng.integers(1, 20))
+        g.insert_chunks(chunks[pos:pos + bs])
+        pos += bs
+        for filt in (None, "leaf", "summary"):
+            want = flat.search_batch(queries, 6, layer_filter=filt)
+            coll, loop = _both_paths(sharded, queries, 6, filt)
+            for hw, hc, hl in zip(want, coll, loop):
+                assert _hits_key(hc) == _hits_key(hw), (filt, hc, hw)
+                assert _hits_key(hc) == _hits_key(hl), (filt, hc, hl)
+    assert sharded.stats.full_rebuilds == 0, sharded.stats
+    assert sharded.stats.rows_tombstoned > 0, sharded.stats
+    assert sharded.stats.compactions > 0, sharded.stats
+
+
+@pytest.mark.multidevice
+def test_collective_survives_seq_renumbering(data_mesh):
+    """Renumbering rewrites every global sequence number; the device
+    seq plane must be re-stamped or the collective's merged ids rot."""
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh)
+    g.insert_chunks(_mk_chunks(7, 40))
+    queries = _queries(7)
+    assert _hits_key(sharded.search_batch(queries, 6)[0]) == \
+        _hits_key(flat.search_batch(queries, 6)[0])
+    flat._next_seq = store_mod._SEQ_LIMIT - 1
+    sharded._next_seq = store_mod._SEQ_LIMIT - 1
+    g.insert_chunks(_mk_chunks(8, 20))
+    for filt in (None, "leaf", "summary"):
+        a = flat.search_batch(queries, 6, layer_filter=filt)
+        b = sharded.search_batch(queries, 6, layer_filter=filt)
+        for ha, hb in zip(a, b):
+            assert _hits_key(ha) == _hits_key(hb), filt
+    assert sharded._next_seq < store_mod._SEQ_LIMIT // 2
+
+
+@pytest.mark.multidevice
+def test_collective_k_beyond_shard_capacity(data_mesh):
+    """k larger than one shard's capacity exercises the
+    k_shard=cap < k_out merge-width path; parity must hold and every
+    live row must be returned when k exceeds the corpus."""
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh,
+                                 min_capacity=8)
+    g.insert_chunks(_mk_chunks(9, 60))
+    q = _queries(9, n=2)
+    a = flat.search_batch(q, 10_000)
+    b = sharded.search_batch(q, 10_000)
+    for ha, hb in zip(a, b):
+        assert _hits_key(ha) == _hits_key(hb)
+        assert len(hb) == sharded.size
+
+
+# ----------------------------------------------------------------------
+# launch accounting
+# ----------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_collective_query_is_one_launch(data_mesh):
+    """The whole sharded query — per-device scans, gather, merge — is
+    ONE host dispatch; the fallback loop pays one per non-empty shard
+    plus the merge."""
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh)
+    g.insert_chunks(_mk_chunks(3, 60))
+    queries = _queries(3)
+    sharded.refresh()
+    mips_ops.reset_launch_count()
+    sharded.search_batch(queries, 6)
+    assert mips_ops.launch_count() == 1, mips_ops.launch_count()
+    # warm cache changes nothing: still one dispatch per query batch
+    mips_ops.reset_launch_count()
+    sharded.search_batch(queries, 6, layer_filter="leaf")
+    assert mips_ops.launch_count() == 1
+    sharded.collective = False
+    n_nonempty = sum(1 for sh in sharded._shards if sh.count)
+    mips_ops.reset_launch_count()
+    sharded.search_batch(queries, 6)
+    assert mips_ops.launch_count() == n_nonempty + 1
+    assert n_nonempty > 1   # the comparison is meaningful
+
+
+# ----------------------------------------------------------------------
+# lockstep growth
+# ----------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_lockstep_growth_after_any_delta_replay(data_mesh):
+    """All shard capacities stay equal after every delta replay, even
+    when routing skews rows across shards — the stacked-scan
+    precondition."""
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh,
+                                 min_capacity=8)
+    rng = np.random.default_rng(11)
+    pos = 0
+    chunks = _mk_chunks(11, 70)
+    while pos < len(chunks):
+        bs = int(rng.integers(1, 16))
+        g.insert_chunks(chunks[pos:pos + bs])
+        pos += bs
+        sharded.refresh()
+        caps = {sh.capacity for sh in sharded._shards}
+        assert len(caps) == 1, caps
+        cap = caps.pop()
+        assert sharded._group.buf.shape == \
+            (4, cap, CFG.embed_dim + store_mod.N_FLAGS)
+        assert all(sh.count <= cap for sh in sharded._shards)
+
+
+@pytest.mark.multidevice
+def test_uneven_shard_count_pads_slots_not_devices(data_mesh):
+    """A shard count that does not divide the data axis pads the slot
+    dim with permanently-empty slots instead of collapsing rows onto
+    one device; results stay bitwise-correct."""
+    n_dev = data_mesh.shape["data"]
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=n_dev + 1, mesh=data_mesh)
+    g.insert_chunks(_mk_chunks(13, 50))
+    sharded.refresh()
+    q = _queries(13)
+    assert sharded._group.n_slots == 2 * n_dev
+    assert sharded._group.buf.shape[0] == 2 * n_dev
+    for ha, hb in zip(flat.search_batch(q, 6),
+                      sharded.search_batch(q, 6)):
+        assert _hits_key(ha) == _hits_key(hb)
+
+
+# ----------------------------------------------------------------------
+# auto-off / degraded meshes
+# ----------------------------------------------------------------------
+
+def test_collective_auto_off_on_single_device_mesh():
+    from repro.launch.mesh import local_data_mesh
+    mesh = local_data_mesh(min_devices=1, n_devices=1)
+    if mesh is None:
+        pytest.skip("no devices")
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=3, mesh=mesh)
+    assert not sharded.collective_active   # degraded mesh: loop path
+    g.insert_chunks(_mk_chunks(14, 30))
+    q = _queries(14)
+    for ha, hb in zip(flat.search_batch(q, 5),
+                      sharded.search_batch(q, 5)):
+        assert _hits_key(ha) == _hits_key(hb)
+
+
+def test_loop_dispatch_k_beyond_small_shard_metadata():
+    """Regression: the loop path's scan covers the LOCKSTEP capacity,
+    so it can return padding rows past a small shard's own staged
+    prefix (another shard's append grew the group).  With shard counts
+    straddling a power-of-two boundary and a large k this walked off
+    the host seq array (IndexError); it must resolve to sentinels."""
+    from test_store_fuzz import ScriptGraph, _vec
+    rng = np.random.default_rng(0)
+    g = ScriptGraph()
+    g.add([(f"n{i:05d}", _vec(rng), i % 2) for i in range(650)])
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=5)   # meshless: loop path
+    sharded.refresh()
+    counts = sorted(len(sh.row_seq) for sh in sharded._shards)
+    q = np.stack([_vec(rng) for _ in range(2)])
+    a = flat.search_batch(q, 150)
+    b = sharded.search_batch(q, 150)
+    for ha, hb in zip(a, b):
+        assert _hits_key(ha) == _hits_key(hb)
+    # the setup really did straddle: some shard's host metadata was
+    # shorter than the shared lockstep capacity before the search
+    assert counts[0] < sharded._group.capacity, \
+        (counts, sharded._group.capacity)
+
+
+def test_collective_auto_off_without_mesh():
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    assert not sharded.collective_active
+    g.insert_chunks(_mk_chunks(15, 20))
+    assert sharded.search_batch(_queries(15), 5)  # loop path serves
+
+
+# ----------------------------------------------------------------------
+# off-query-path compaction: rotation + double buffer
+# ----------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_refresh_compacts_at_most_one_shard(data_mesh):
+    """Each refresh commits at most one shard's compaction; deferred
+    over-threshold shards are counted and picked up by the rotation on
+    later refreshes; forced compact() drains everything."""
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4, mesh=data_mesh,
+                                 compact_threshold=0.01)
+    flat = VectorStore(g, compact_threshold=0.01)
+    chunks = _mk_chunks(5, 80)
+    queries = _queries(5)
+    committed_before = 0
+    for i in range(0, len(chunks), 11):
+        g.insert_chunks(chunks[i:i + 11])
+        sharded.refresh()   # commits <= 1 pending, schedules <= 1 new
+        committed = sum(sh.stats.compactions
+                        for sh in sharded._shards)
+        assert committed - committed_before <= 1, \
+            (committed, committed_before)
+        committed_before = committed
+        # a query between refreshes is served from the live stack and
+        # stays bitwise equal to the flat store even with a staged swap
+        for ha, hb in zip(flat.search_batch(queries, 6),
+                          sharded.search_batch(queries, 6)):
+            assert _hits_key(ha) == _hits_key(hb)
+    assert sum(sh.stats.compactions for sh in sharded._shards) > 0
+    assert sharded.stats.compactions_skipped > 0, sharded.stats
+    sharded.compact()       # escape hatch drains every shard
+    assert sharded.pending_compaction is None
+    assert all(sh.n_dead == 0 for sh in sharded._shards)
+    flat.compact()
+    for ha, hb in zip(flat.search_batch(queries, 6),
+                      sharded.search_batch(queries, 6)):
+        assert _hits_key(ha) == _hits_key(hb)
+
+
+@pytest.mark.multidevice
+def test_compaction_swap_is_double_buffered(data_mesh):
+    """The scheduled gather must not touch the serving stack: between
+    the scheduling refresh and the committing one, the shard still
+    reports its tombstones (old layout) while results stay correct;
+    the NEXT refresh swaps the double buffer in."""
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    sharded = ShardedVectorStore(g, n_shards=2, mesh=data_mesh,
+                                 compact_threshold=0.01)
+    g.insert_chunks(_mk_chunks(6, 40))
+    sharded.refresh()
+    # summary churn until some shard crosses the threshold and a swap
+    # is staged (each refresh commits the prior one first)
+    s = None
+    for seed in range(20, 40):
+        g.insert_chunks(_mk_chunks(seed, 9))
+        sharded.refresh()
+        s = sharded.pending_compaction
+        if s is not None:
+            break
+    assert s is not None
+    sh = sharded._shards[s]
+    dead_staged = sh.n_dead
+    assert dead_staged > 0          # swap not applied yet (old layout)
+    buf_before = sharded._group.buf
+    for ha, hb in zip(flat.search_batch(_queries(6), 6),
+                      sharded.search_batch(_queries(6), 6)):
+        assert _hits_key(ha) == _hits_key(hb)
+    assert sharded._group.buf is buf_before   # query didn't swap
+    sharded.refresh()               # no version bump: commit-only
+    assert sharded.pending_compaction is None or \
+        sharded.pending_compaction != s
+    assert sh.n_dead == 0           # the staged swap landed
+    assert sh.stats.compactions == 1
+
+
+# ----------------------------------------------------------------------
+# routing cache instrumentation
+# ----------------------------------------------------------------------
+
+def test_routing_cache_counters_and_bulk_bypass():
+    from repro.core.store import routing_cache_info, shard_of_many
+    info0 = routing_cache_info()
+    ids = [f"bulk-{i}" for i in range(store_mod._BULK_ROUTE_MIN)]
+    owners = shard_of_many(ids, 4)
+    info1 = routing_cache_info()
+    # the bulk pass bypassed the LRU entirely...
+    assert info1["bulk_routed"] - info0["bulk_routed"] == len(ids)
+    assert info1["misses"] == info0["misses"]
+    # ...and agrees exactly with the per-id cached route
+    assert owners.tolist() == [store_mod.shard_of(i, 4) for i in ids]
+    # small batches go through the LRU and surface hit/miss movement
+    small = [f"small-{i}" for i in range(16)]
+    shard_of_many(small, 4)
+    shard_of_many(small, 4)
+    info2 = routing_cache_info()
+    assert info2["misses"] >= info1["misses"] + len(small)
+    assert info2["hits"] >= info1["hits"] + len(small)
+    # stats surface the movement ATTRIBUTED to this store: traffic
+    # from before its construction is excluded, its own replay counts
+    g = EraGraph(CFG, _EMB)
+    sharded = ShardedVectorStore(g, n_shards=4)
+    assert sharded.stats.route_misses == 0
+    assert sharded.stats.bulk_routed == 0
+    g.insert_chunks(_mk_chunks(17, 20))
+    sharded.refresh()
+    stats = sharded.stats
+    assert stats.route_hits + stats.route_misses > 0, stats
+    big = [f"bulk2-{i}" for i in range(store_mod._BULK_ROUTE_MIN)]
+    shard_of_many(big, 4)
+    assert sharded.stats.bulk_routed >= len(big)

@@ -106,20 +106,25 @@ def test_sharded_compaction_is_per_shard_and_invisible(data_mesh):
 
 
 @pytest.mark.multidevice
-def test_shard_buffers_live_on_distinct_mesh_devices(data_mesh):
-    """One shard per data-axis device: one buffer on each device."""
+def test_stacked_buffer_spans_the_data_mesh(data_mesh):
+    """The stacked shard buffer's slot dim is laid out over the data
+    axis: one slot's rows per device, on every device — and the layout
+    survives the delta-update chain (growth, staging, tombstones)."""
     n_dev = data_mesh.shape["data"]
     g = EraGraph(CFG, _EMB)
     sharded = ShardedVectorStore(g, n_shards=n_dev, mesh=data_mesh)
     g.insert_chunks(_mk_chunks(2, 40))
     sharded.refresh()
-    devices = set()
-    for sh in sharded._shards:
-        devs = sh.buf.devices() if hasattr(sh.buf, "devices") \
-            else {sh.buf.device()}
-        assert len(devs) == 1
-        devices.update(devs)
-    assert len(devices) == n_dev, devices
+    buf = sharded._group.buf
+    assert buf.shape[0] == n_dev
+    pieces = list(buf.addressable_shards)
+    assert {s.device for s in pieces} == set(data_mesh.devices.flat)
+    # each device holds exactly one slot's rows (no replication)
+    assert all(s.data.shape[0] == 1 for s in pieces)
+    # the seq plane shares the layout (collective scan precondition)
+    assert sharded._group.seq.shape == (n_dev, sharded._group.capacity)
+    assert all(s.data.shape[0] == 1
+               for s in sharded._group.seq.addressable_shards)
 
 
 def test_sharded_single_vs_batch_bitwise_identical():
