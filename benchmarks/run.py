@@ -23,6 +23,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         query_batch,
         roofline,
         segment_size,
+        serving_batch,
         sharded_store,
         small_update,
         static_qa,
@@ -41,6 +42,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         "update_breakdown": lambda: update_breakdown.run(n_docs=n),
         "chunk_size": lambda: chunk_size.run(n_docs=half),
         "query_batch": lambda: query_batch.run(n_docs=half),
+        "serving_batch": lambda: serving_batch.run(n_docs=half),
         "sharded_store": lambda: sharded_store.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
@@ -56,6 +58,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # at smoke scale too, recording BENCH_sharded_query.json
         suites["sharded_store"] = lambda: sharded_store.run(
             n_docs=24, batch=8, shard_sweep=(1, 4, 8))
+        # bucketed-prefill + batched-multihop sweep at smoke scale,
+        # recording BENCH_serving_batch.json (parity asserted)
+        suites["serving_batch"] = lambda: serving_batch.run(
+            n_docs=24, n_prompts=6, batch=6)
     return suites
 
 
@@ -83,6 +89,13 @@ def main(argv=None) -> None:
         try:
             for row in fn():
                 print(row, flush=True)
+        except AssertionError:
+            # a tripped parity/invariant assertion is a correctness
+            # bug, not a flaky benchmark: abort with a nonzero exit
+            # immediately instead of printing and continuing
+            print(f"{name},0.0,ASSERTION_FAILED", flush=True)
+            traceback.print_exc()
+            raise SystemExit(f"parity assertion tripped in {name!r}")
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", flush=True)

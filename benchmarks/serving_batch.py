@@ -1,0 +1,132 @@
+"""Batched-serving sweep: bucketed prefill + batched multihop.
+
+Two serving hot paths against their per-request baselines:
+
+- **prefill**: ``Engine.generate_batch`` over a prompt block whose
+  padded (pow-2) lengths collide buckets, vs a one-slot engine serving
+  the same prompts sequentially (one prefill launch per admission).
+  Reported: prefill launch counts (batched launches < prompts is the
+  tracked sharing signal) and end-to-end QPS; per-prompt outputs are
+  asserted tokenwise equal.
+- **multihop**: ``RAGPipeline.answer_batch(mode='multihop')`` vs the
+  per-question ``answer(mode='multihop')`` oracle on a mixed block
+  (some questions short-circuit after round 1).  Reported: batched
+  retrieval rounds (exactly 2 for any block with a hop) and QPS, with
+  answer/context parity asserted.
+
+The sweep is written to ``BENCH_serving_batch.json`` so the serving
+trajectory records across commits.  On CPU CI absolute QPS is
+toy-scale; the launch/round counts and parity are the tracked signals.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import List
+
+from benchmarks.common import SYSTEMS, bench_corpus, csv_row
+from repro.serving.rag_pipeline import RAGPipeline
+from repro.serving.testing import make_test_engine as _engine
+
+
+def _best_time(fn, repeats: int = 2) -> float:
+    fn()  # warm up (jit/compile)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _prefill_rows(n_prompts: int, report: dict) -> List[str]:
+    # word counts chosen so padded lengths (words + BOS/EOS) collide
+    # into two pow-2 buckets regardless of n_prompts
+    prompts = [" ".join(f"w{i}x{j}" for j in range(5 + (i % 2)
+                                                   + 8 * (i % 4 // 2)))
+               for i in range(n_prompts)]
+    eng_b = _engine(max_batch=n_prompts)
+    batched = eng_b.generate_batch(prompts)
+    launches = eng_b.stats["prefill_launches"]
+    assert launches < eng_b.stats["prefill_prompts"], eng_b.stats
+    eng_s = _engine(max_batch=1)
+    sequential = [eng_s.generate(p) for p in prompts]
+    mismatch = sum(a != b for a, b in zip(batched, sequential))
+    assert mismatch == 0, \
+        f"bucketed prefill != sequential on {mismatch} prompts"
+    t_bat = _best_time(lambda: eng_b.generate_batch(prompts))
+    t_seq = _best_time(lambda: [eng_s.generate(p) for p in prompts])
+    report["prefill"] = {
+        "prompts": n_prompts, "launches": launches,
+        "seq_launches": n_prompts,
+        "batched_qps": n_prompts / max(t_bat, 1e-9),
+        "seq_qps": n_prompts / max(t_seq, 1e-9)}
+    return [
+        csv_row(f"serving_batch/prefill_b{n_prompts}",
+                1e6 * t_bat / n_prompts,
+                f"prefill_launches={launches};prompts={n_prompts};"
+                f"batched_qps={n_prompts / max(t_bat, 1e-9):.1f};"
+                f"seq_qps={n_prompts / max(t_seq, 1e-9):.1f};"
+                f"speedup={t_seq / max(t_bat, 1e-9):.2f}x"),
+        csv_row("serving_batch/prefill_parity", 0.0,
+                f"mismatches={mismatch}_of_{n_prompts}"),
+    ]
+
+
+def _multihop_rows(n_docs: int, batch: int, report: dict) -> List[str]:
+    corpus = bench_corpus(n_docs=n_docs)
+    rag = SYSTEMS["erarag"]()
+    rag.insert_docs(corpus.docs)
+    rag.store.refresh()
+    pipe = RAGPipeline(rag)
+    questions = [qa.question for qa in corpus.qa
+                 if qa.kind == "multihop"]
+    questions += ["What is the color of the partner of ent_missing?"]
+    questions += [qa.question for qa in corpus.qa
+                  if qa.kind == "detailed"]
+    block = questions[:batch]
+    r0 = rag.stats["retrieval_rounds"]
+    batched = pipe.answer_batch(block, mode="multihop")
+    rounds = rag.stats["retrieval_rounds"] - r0
+    assert rounds <= 2, f"multihop block took {rounds} rounds"
+    single = [pipe.answer(q, mode="multihop") for q in block]
+    mismatch = sum(a.answer != b.answer or a.context != b.context
+                   for a, b in zip(batched, single))
+    assert mismatch == 0, \
+        f"batched multihop != per-question on {mismatch} questions"
+    t_bat = _best_time(
+        lambda: pipe.answer_batch(block, mode="multihop"))
+    t_loop = _best_time(
+        lambda: [pipe.answer(q, mode="multihop") for q in block])
+    report["multihop"] = {
+        "batch": len(block), "retrieval_rounds": rounds,
+        "batched_qps": len(block) / max(t_bat, 1e-9),
+        "loop_qps": len(block) / max(t_loop, 1e-9)}
+    return [
+        csv_row(f"serving_batch/multihop_b{len(block)}",
+                1e6 * t_bat / len(block),
+                f"retrieval_rounds={rounds};"
+                f"batched_qps={len(block) / max(t_bat, 1e-9):.1f};"
+                f"loop_qps={len(block) / max(t_loop, 1e-9):.1f};"
+                f"speedup={t_loop / max(t_bat, 1e-9):.2f}x"),
+        csv_row("serving_batch/multihop_parity", 0.0,
+                f"mismatches={mismatch}_of_{len(block)}"),
+    ]
+
+
+def run(n_docs: int = 40, n_prompts: int = 8, batch: int = 8,
+        out_json: str | None = "BENCH_serving_batch.json"
+        ) -> List[str]:
+    report: dict = {}
+    rows = _prefill_rows(n_prompts, report)
+    rows += _multihop_rows(n_docs, batch, report)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -15,8 +15,9 @@ import numpy as np
 
 from repro.common.config import EraRAGConfig
 from repro.core.graph import EraGraph, UpdateReport
-from repro.core.retrieve import Retrieval, adaptive_search_batch, \
-    collapsed_search_batch
+from repro.core.retrieve import BridgeFn, Retrieval, \
+    adaptive_search_batch, collapsed_search_batch, \
+    multihop_search_batch
 from repro.core.store import AnyStore, ShardedVectorStore, \
     VectorStore, store_from_state
 from repro.core.summarize import Summarizer
@@ -47,6 +48,10 @@ class EraRAG:
         self.graph = EraGraph(cfg, embedder, summarizer, self.tokenizer)
         self.store = make_store(self.graph, cfg, mesh)
         self.reports: List[UpdateReport] = []
+        # batched-retrieval-round counter: every batched store sweep
+        # (however many questions it serves) counts ONE round, so the
+        # serving suite can assert a multihop block costs exactly two
+        self.stats = {"retrieval_rounds": 0}
 
     # ------------------------------------------------------------------
     def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
@@ -57,20 +62,42 @@ class EraRAG:
         return report
 
     def query(self, text: str, k: Optional[int] = None,
-              mode: str = "collapsed") -> Retrieval:
-        """mode: collapsed | detailed | summarized."""
-        return self.query_batch([text], k=k, mode=mode)[0]
+              mode: str = "collapsed",
+              bridge_fn: Optional[BridgeFn] = None) -> Retrieval:
+        """mode: collapsed | detailed | summarized | multihop."""
+        return self.query_batch([text], k=k, mode=mode,
+                                bridge_fn=bridge_fn)[0]
 
     def query_batch(self, texts: Sequence[str],
                     k: Optional[int] = None,
-                    mode: str = "collapsed") -> List[Retrieval]:
+                    mode: str = "collapsed",
+                    bridge_fn: Optional[BridgeFn] = None
+                    ) -> List[Retrieval]:
         """Batched retrieval: one embedder call + one store scan per
         kernel launch for the whole query block.  ``query`` is the B=1
-        special case, so results match a per-query loop exactly."""
+        special case, so results match a per-query loop exactly.
+
+        ``mode='multihop'`` runs two-round retrieval — round 1 serves
+        the whole block as one detailed-biased adaptive batch, the
+        resolved bridge queries form one round-2 batch — and returns
+        ``HopRetrieval`` rows with composed contexts.  ``bridge_fn``
+        overrides the deterministic regex bridge resolution (the
+        serving pipeline injects an LM-backed one); it is only
+        consulted in multihop mode."""
         k = k or self.cfg.top_k
+        texts = list(texts)
         if not texts:
             return []
-        q = np.asarray(self.embedder.encode(list(texts)))
+        if mode == "multihop":
+            rets = multihop_search_batch(
+                self.graph, self.store, self.embedder.encode, texts, k,
+                self.cfg.token_budget, self.cfg.retrieval_bias_p,
+                bridge_fn=bridge_fn, tokenizer=self.tokenizer)
+            self.stats["retrieval_rounds"] += \
+                1 + int(any(r.hops == 2 for r in rets))
+            return rets
+        q = np.asarray(self.embedder.encode(texts))
+        self.stats["retrieval_rounds"] += 1
         if mode == "collapsed":
             return collapsed_search_batch(self.graph, self.store, q, k,
                                           self.cfg.token_budget,

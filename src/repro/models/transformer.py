@@ -241,6 +241,43 @@ def prefill(params: Params, tokens: jnp.ndarray, cfg: LMConfig,
     return logits[:, 0], new_caches
 
 
+def prefill_padded(params: Params, tokens: jnp.ndarray,
+                   lengths: jnp.ndarray, cfg: LMConfig,
+                   max_len: Optional[int] = None, *,
+                   compute_dtype=jnp.bfloat16):
+    """Right-padded batched prefill (the serving engine's bucketed path).
+
+    ``tokens``: (b, l) prompts right-padded to a shared bucket length;
+    ``lengths``: (b,) true prompt lengths.  Causal masking makes every
+    real position independent of the padding tail (a query at position
+    ``i < lengths[b]`` only attends keys ``<= i``, all real), so row
+    ``b``'s cache prefix ``[: lengths[b]]`` and its returned logits —
+    taken at position ``lengths[b] - 1`` — match an unpadded per-row
+    ``prefill``.  (Exact for dense FFN; MoE capacity routing couples
+    batch rows by design.)  Cache rows at ``lengths[b]:`` hold padding
+    K/V: decode overwrites position ``lengths[b]`` before reading it
+    and masks the rest via ``kv_len``, so they are never observed.
+
+    Returns (per-row next-token logits (b, vocab), kv caches).
+    """
+    b, l = tokens.shape
+    max_len = max_len or l
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    x = shard(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(l)
+    caches = make_kv_cache(cfg, b, max_len, compute_dtype)
+    x, _, new_caches = _backbone(params, x, cfg, positions, remat=True,
+                                 kv_caches=caches,
+                                 cache_len=jnp.int32(0))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # gather each row's last REAL position before the head so the
+    # logits matmul stays O(b), not O(b * l)
+    last = jnp.clip(lengths.astype(jnp.int32) - 1, 0, l - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (b, 1, d)
+    logits = _logits(params, x, cfg)
+    return logits[:, 0], new_caches
+
+
 def decode_step(params: Params, tokens: jnp.ndarray, caches,
                 cache_len: jnp.ndarray, cfg: LMConfig, *,
                 compute_dtype=jnp.bfloat16):

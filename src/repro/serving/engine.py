@@ -1,22 +1,29 @@
 """Batched LM serving engine (continuous-batching lite).
 
-Requests queue up; the engine admits up to ``max_batch`` of them into
-fixed decode slots, prefills each prompt into its slot's KV cache, and
-decodes with *micro-batched* steps: active slots are grouped by cache
-length and each group shares ONE jitted ``decode_step`` launch (padded
-fixed shapes — no recompilation).  Requests admitted together decode in
-lock-step, so concurrent traffic costs one kernel launch per token
-instead of one per slot per token; ``stats['decode_launches']`` vs
-``stats['slot_steps']`` measures the sharing ratio.  Slots free as soon
-as a sequence emits EOS or hits its token budget and are refilled from
-the queue: the slot-level admission/eviction is the continuous-batching
-scheduling pattern (vLLM-style) restricted to whole-slot granularity.
-(Prefill is still per-admission; batched prefill for equal-length
-prompts is a ROADMAP open item.)
+Requests queue up; the engine admits them into fixed decode slots with
+*bucketed prefill*: each admission wave drains the queue into the free
+slots, groups the pending prompts by padded length (pow-2 buckets up
+to ``max_seq_len``), and runs ONE jitted ``prefill_padded`` launch per
+bucket — a length mask picks each row's true last position and the
+per-slot KV rows are scattered into the shared cache afterwards, so
+concurrent admissions cost one kernel launch per *bucket* instead of
+one per prompt.  ``stats['prefill_launches']`` vs
+``stats['prefill_prompts']`` measures that sharing.  Decode is
+*micro-batched* the same way: active slots are grouped by cache length
+and each group shares ONE jitted ``decode_step`` launch (padded fixed
+shapes — no recompilation); ``stats['decode_launches']`` vs
+``stats['slot_steps']`` is the decode-side sharing ratio.  Slots free
+as soon as a sequence emits EOS or hits its token budget and are
+refilled from the queue: the slot-level admission/eviction is the
+continuous-batching scheduling pattern (vLLM-style) restricted to
+whole-slot granularity.  Over-long prompts are truncated
+deterministically to ``max_seq_len - budget - 1`` tokens at admission,
+so a mis-sized request can never spill into a neighbor slot's cache.
 
 This is the LLM backend for EraRAG's summarizer (LMSummarizer), for
 the QA reader in examples/rag_serve.py, and for
-``RAGPipeline.answer_batch``'s shared-launch reader path.
+``RAGPipeline.answer_batch``'s shared-launch reader and multihop
+bridge-extraction paths.
 """
 from __future__ import annotations
 
@@ -66,8 +73,15 @@ class Engine:
         self._next_id = 0
         # launch-sharing instrumentation: slot_steps counts (slot,
         # token) decode units, decode_launches the kernel launches that
-        # served them; equal-length grouping makes launches < steps
-        self.stats = {"decode_launches": 0, "slot_steps": 0}
+        # served them (equal-length grouping makes launches < steps);
+        # prefill_prompts counts admitted prompts, prefill_launches the
+        # bucketed prefill launches that served them (length-colliding
+        # admissions make launches < prompts); generate_batches counts
+        # ``generate_batch`` calls — the serving pipeline asserts its
+        # multihop path costs exactly two per question block
+        self.stats = {"decode_launches": 0, "slot_steps": 0,
+                      "prefill_launches": 0, "prefill_prompts": 0,
+                      "generate_batches": 0}
 
         def _decode(params, tokens, caches, lengths):
             """Per-slot decode: each slot has its own cache length."""
@@ -83,12 +97,12 @@ class Engine:
             logits = T._logits(params, x, cfg)
             return logits[:, -1], new_caches
 
-        # Per-slot cache_len requires per-batch dynamic_update_slice;
-        # simpler: serve via uniform-step batches (prefill aligns slots)
-        self._prefill = jax.jit(
-            lambda p, t: T.prefill(p, t, cfg,
-                                   max_len=ecfg.max_seq_len,
-                                   compute_dtype=ecfg.compute_dtype))
+        # bucketed prefill: batch dim fixed at max_batch, length padded
+        # to the pow-2 bucket -> at most log2(max_seq_len) compiles
+        self._prefill_bucket = jax.jit(
+            lambda p, t, l: T.prefill_padded(
+                p, t, l, cfg, max_len=ecfg.max_seq_len,
+                compute_dtype=ecfg.compute_dtype))
         self._decode_step = jax.jit(
             lambda p, t, c, l: T.decode_step(
                 p, t, c, l, cfg, compute_dtype=ecfg.compute_dtype))
@@ -110,36 +124,72 @@ class Engine:
                        max_new_tokens: Optional[int] = None
                        ) -> List[str]:
         """Submit a prompt batch before draining so concurrent requests
-        land in slots together and share decode launches."""
+        land in slots together and share prefill + decode launches."""
+        if not prompts:
+            return []
+        self.stats["generate_batches"] += 1
         rids = [self.submit(p, max_new_tokens) for p in prompts]
         self.run_until_done()
         return [" ".join(f"tok{t}" for t in self._results.pop(r))
                 for r in rids]
 
     # ------------------------------------------------------------------
-    def _admit(self) -> None:
-        """Fill free slots from the queue (one prefill per admission).
+    def _bucket_len(self, n: int) -> int:
+        """Pow-2 padded length bucket, capped at ``max_seq_len``."""
+        length = 8
+        while length < n:
+            length *= 2
+        return min(length, self.ecfg.max_seq_len)
 
-        Slot caches share a batch dim; each admission prefills its
-        prompt alone and copies the KV rows into the slot."""
-        for i, slot in enumerate(self.slots):
-            if slot.active or self._queue.empty():
-                continue
+    def _admit(self) -> None:
+        """Drain the queue into free slots with bucketed prefill.
+
+        Pending prompts are grouped by padded (pow-2) length and each
+        bucket runs as ONE ``prefill_padded`` launch over a
+        ``max_batch``-wide padded block — the length mask keeps every
+        row independent of its padding tail — then each row's KV cache
+        is scattered into its slot.  Prompts are truncated
+        deterministically to ``max_seq_len - budget - 1`` tokens so an
+        over-long request degrades alone instead of overflowing the
+        shared cache."""
+        free = [i for i, s in enumerate(self.slots) if not s.active]
+        pending = []
+        while free and not self._queue.empty():
             rid, prompt, budget = self._queue.get()
+            budget = max(1, min(budget, self.ecfg.max_seq_len - 2))
             ids = self.tok.encode(prompt, add_special=True)
-            ids = ids[: self.ecfg.max_seq_len - budget - 1]
-            tokens = jnp.asarray(ids[None, :], dtype=jnp.int32)
-            logits, cache1 = self._prefill(self.params, tokens)
-            # copy single-row cache into slot i
-            def put_row(dst, src):
-                return dst.at[:, i:i + 1].set(src[:, 0:1])
-            self.caches = jax.tree.map(put_row, self.caches, cache1)
-            first = int(np.argmax(np.asarray(logits)[0]))
-            slot.active = True
-            slot.length = len(ids)
-            slot.budget = budget
-            slot.out_tokens = [first]
-            slot.request_id = rid
+            ids = ids[: max(1, self.ecfg.max_seq_len - budget - 1)]
+            pending.append((free.pop(0), rid, [int(t) for t in ids],
+                            budget))
+        if not pending:
+            return
+        buckets: Dict[int, list] = {}
+        for item in pending:
+            buckets.setdefault(self._bucket_len(len(item[2])),
+                               []).append(item)
+        for blen, group in sorted(buckets.items()):
+            tokens = np.zeros((self.ecfg.max_batch, blen), np.int32)
+            lengths = np.zeros((self.ecfg.max_batch,), np.int32)
+            for j, (_, _, ids, _) in enumerate(group):
+                tokens[j, :len(ids)] = ids
+                lengths[j] = len(ids)
+            logits, cache = self._prefill_bucket(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths))
+            self.stats["prefill_launches"] += 1
+            self.stats["prefill_prompts"] += len(group)
+            dst = jnp.asarray([i for i, *_ in group], jnp.int32)
+            src = jnp.arange(len(group), dtype=jnp.int32)
+
+            def scatter(old, new):
+                return old.at[:, dst].set(new[:, src])
+
+            self.caches = jax.tree.map(scatter, self.caches, cache)
+            logits = np.asarray(logits)
+            for j, (i, rid, ids, budget) in enumerate(group):
+                self.slots[i] = _Slot(
+                    active=True, length=len(ids), budget=budget,
+                    out_tokens=[int(np.argmax(logits[j]))],
+                    request_id=rid)
 
     def step(self) -> int:
         """One engine iteration: admit + micro-batched decode.

@@ -4,11 +4,18 @@ The paper's Alg 2 as a service: queries retrieve a budgeted context
 from the hierarchical graph, the context + question form the reader
 prompt, and the engine decodes the answer.  ``answer_batch``
 micro-batches concurrent questions end-to-end — one retrieval kernel
-launch for the whole question block (``EraRAG.query_batch``) and, with
-an LM reader attached, a shared-slot decode via
-``Engine.generate_batch``.  Also provides the deterministic
-``ExtractiveReader`` used by benchmarks so Accuracy / Recall are
-measurable offline (containment metric, §IV).
+launch per round for the whole question block (``EraRAG.query_batch``)
+and, with an LM reader attached, bucketed-prefill shared-slot decodes
+via ``Engine.generate_batch``.  Multihop questions batch too
+(``mode='multihop'``): round-1 retrieval, bridge extraction (ONE
+``generate_batch`` launch when an LM reader is attached), round-2
+retrieval, and the final reader pass each run once per question
+*block*, so a B-question multihop batch costs exactly two reader
+launches and two batched retrieval rounds.  ``answer`` is the
+sequential per-question oracle the differential serving suite compares
+against.  Also provides the deterministic ``ExtractiveReader`` used by
+benchmarks so Accuracy / Recall are measurable offline (containment
+metric, §IV).
 """
 from __future__ import annotations
 
@@ -17,7 +24,8 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.erarag import EraRAG
-from repro.core.retrieve import Retrieval
+from repro.core.retrieve import Retrieval, compose_hop_query, \
+    default_bridge_fn, is_hop_question
 
 
 @dataclass
@@ -62,19 +70,15 @@ class ExtractiveReader:
 
     def answer_multihop(self, question: str, rag: "EraRAG",
                         k: Optional[int] = None) -> Tuple[str, Retrieval]:
-        """Two-round retrieval: resolve the bridge entity, re-query."""
+        """Two-round retrieval: resolve the bridge entity, re-query.
+        (Benchmark-side sequential path; serving goes through
+        ``RAGPipeline.answer_batch(mode='multihop')``.)"""
         r1 = rag.query(question, k=k)
-        m = re.search(r"partner of (\w+)", question)
-        if m:
-            bridge = re.search(
-                rf"The partner of {m.group(1)} is (\w+)", r1.context)
-            if bridge:
-                rel = re.search(r"What is the (\w+) of", question)
-                q2 = f"What is the {rel.group(1)} of " \
-                     f"{bridge.group(1)}?" if rel else bridge.group(1)
-                r2 = rag.query(q2, k=k)
-                merged = r1.context + "\n" + r2.context
-                return self.answer(q2, merged), r2
+        [q2] = default_bridge_fn([question], [r1])
+        if q2:
+            r2 = rag.query(q2, k=k)
+            merged = r1.context + "\n" + r2.context
+            return self.answer(q2, merged), r2
         return self.answer(question, r1.context), r1
 
 
@@ -89,7 +93,9 @@ class RAGPipeline:
         per-shard row/dead-ratio breakdown when the store is sharded
         over the data mesh axis (dashboards / capacity planning)."""
         store = self.rag.store
-        report = {"size": store.size, "stats": dict(vars(store.stats))}
+        report = {"size": store.size, "stats": dict(vars(store.stats)),
+                  "retrieval_rounds":
+                      self.rag.stats["retrieval_rounds"]}
         if hasattr(store, "shard_report"):
             report["shards"] = store.shard_report()
             # dispatch mode + rotating-compaction state: a dashboard
@@ -103,53 +109,114 @@ class RAGPipeline:
     def _prompt(question: str, context: str) -> str:
         return f"Context:\n{context}\n\nQuestion: {question}\nAnswer:"
 
+    @staticmethod
+    def _bridge_prompt(question: str, context: str) -> str:
+        return (f"Context:\n{context}\n\nQuestion: {question}\n"
+                f"Bridge entity:")
+
+    def _bridge_fn(self, batched: bool):
+        """Bridge resolution for the multihop rounds.  The
+        deterministic regex gate decides WHICH questions take a second
+        hop (so batched and per-question paths agree on short-
+        circuits); with an LM reader attached the follow-up query is
+        composed from its bridge-extraction output — ONE
+        ``generate_batch`` launch for the whole block on the batched
+        path, per-question ``generate`` calls on the oracle path."""
+        if self.engine is None:
+            return None  # retrieve.default_bridge_fn
+
+        def fn(questions, retrievals):
+            bridges = default_bridge_fn(questions, retrievals)
+            gated = [i for i, b in enumerate(bridges) if b]
+            if not gated:
+                return bridges
+            prompts = [self._bridge_prompt(questions[i],
+                                           retrievals[i].context)
+                       for i in gated]
+            outs = (self.engine.generate_batch(prompts) if batched
+                    else [self.engine.generate(p) for p in prompts])
+            for i, entity in zip(gated, outs):
+                bridges[i] = compose_hop_query(questions[i], entity)
+            return bridges
+
+        return fn
+
+    def _multihop(self, questions: List[str], batched: bool
+                  ) -> List[RAGAnswer]:
+        """Two-round multihop answering.  ``batched=True`` groups the
+        block: ONE round-1 retrieval batch, ONE bridge-extraction
+        launch, ONE round-2 batch, ONE final reader launch.
+        ``batched=False`` is the sequential per-question oracle the
+        differential suite compares against."""
+        bridge_fn = self._bridge_fn(batched)
+        if batched:
+            rets = self.rag.query_batch(questions, mode="multihop",
+                                        bridge_fn=bridge_fn)
+        else:
+            rets = [self.rag.query(q, mode="multihop",
+                                   bridge_fn=bridge_fn)
+                    for q in questions]
+        if self.engine is not None:
+            prompts = [self._prompt(q, r.context)
+                       for q, r in zip(questions, rets)]
+            texts = (self.engine.generate_batch(prompts) if batched
+                     else [self.engine.generate(p) for p in prompts])
+        else:
+            texts = [self.reader.answer(r.bridge_query or q, r.context)
+                     for q, r in zip(questions, rets)]
+        return [RAGAnswer(answer=t, context=r.context,
+                          n_context_tokens=r.n_tokens,
+                          hits=len(r.hits))
+                for t, r in zip(texts, rets)]
+
     def answer(self, question: str, mode: str = "collapsed"
                ) -> RAGAnswer:
+        """Per-question oracle path: sequential rounds, B=1 launches —
+        ``answer_batch`` must match it answer-for-answer."""
+        if mode == "multihop" or (self.engine is None
+                                  and is_hop_question(question)):
+            return self._multihop([question], batched=False)[0]
         r = self.rag.query(question, mode=mode)
-        if self.engine is not None:
-            text = self.engine.generate(self._prompt(question,
-                                                     r.context))
-        elif "partner of" in question:
-            text, r = self.reader.answer_multihop(question, self.rag)
-        else:
-            text = self.reader.answer(question, r.context)
+        text = (self.engine.generate(self._prompt(question, r.context))
+                if self.engine is not None
+                else self.reader.answer(question, r.context))
         return RAGAnswer(answer=text, context=r.context,
                          n_context_tokens=r.n_tokens, hits=len(r.hits))
 
     def answer_batch(self, questions: Sequence[str],
                      mode: str = "collapsed") -> List[RAGAnswer]:
         """Answer a question block with shared kernel launches: one
-        batched retrieval scan, then (if an LM reader is attached) a
-        decode where all prompts occupy engine slots concurrently.
-        Multihop questions fall back to the per-question path (their
-        second retrieval round depends on the first answer)."""
+        batched retrieval scan per round and (if an LM reader is
+        attached) bucketed-prefill decodes where all prompts occupy
+        engine slots concurrently.  ``mode='multihop'`` batches both
+        rounds end-to-end; on the reader path, two-hop-shaped
+        questions route through the same batched multihop machinery
+        (there is no per-question fallback)."""
         questions = list(questions)
         if not questions:
             return []
+        if mode == "multihop":
+            return self._multihop(questions, batched=True)
         out: List[Optional[RAGAnswer]] = [None] * len(questions)
-        if self.engine is not None:
-            rets = self.rag.query_batch(questions, mode=mode)
-            texts = self.engine.generate_batch(
-                [self._prompt(q, r.context)
-                 for q, r in zip(questions, rets)])
-            for i, (r, text) in enumerate(zip(rets, texts)):
+        hop = [i for i, q in enumerate(questions)
+               if self.engine is None and is_hop_question(q)]
+        plain = [i for i in range(len(questions)) if i not in set(hop)]
+        if plain:
+            rets = self.rag.query_batch([questions[i] for i in plain],
+                                        mode=mode)
+            if self.engine is not None:
+                texts = self.engine.generate_batch(
+                    [self._prompt(questions[i], r.context)
+                     for i, r in zip(plain, rets)])
+            else:
+                texts = [self.reader.answer(questions[i], r.context)
+                         for i, r in zip(plain, rets)]
+            for i, r, text in zip(plain, rets, texts):
                 out[i] = RAGAnswer(answer=text, context=r.context,
                                    n_context_tokens=r.n_tokens,
                                    hits=len(r.hits))
-            return out  # type: ignore[return-value]
-        plain = [i for i, q in enumerate(questions)
-                 if "partner of" not in q]
-        rets = self.rag.query_batch([questions[i] for i in plain],
-                                    mode=mode)
-        for i, r in zip(plain, rets):
-            text = self.reader.answer(questions[i], r.context)
-            out[i] = RAGAnswer(answer=text, context=r.context,
-                               n_context_tokens=r.n_tokens,
-                               hits=len(r.hits))
-        for i, q in enumerate(questions):
-            if out[i] is None:  # multihop: round 2 depends on round 1
-                text, r = self.reader.answer_multihop(q, self.rag)
-                out[i] = RAGAnswer(answer=text, context=r.context,
-                                   n_context_tokens=r.n_tokens,
-                                   hits=len(r.hits))
+        if hop:
+            for i, ans in zip(hop, self._multihop(
+                    [questions[i] for i in hop], batched=True)):
+                out[i] = ans
         return out  # type: ignore[return-value]

@@ -1,0 +1,38 @@
+"""Tiny seeded serving engines for tests and benchmark baselines.
+
+One recipe, one parameter cache: the differential serving suites and
+``benchmarks/serving_batch.py`` both need a small LM behind an
+``Engine``, and their batched-vs-sequential comparisons are only
+meaningful when every engine built from the same recipe shares
+IDENTICAL weights.  ``init_params`` results are cached per
+(config, seed), so repeated factory calls are cheap and
+weight-identical by construction.
+"""
+from __future__ import annotations
+
+from repro.common.config import LMConfig
+from repro.serving.engine import Engine, EngineConfig
+
+_PARAMS_CACHE: dict = {}
+
+
+def make_test_engine(max_batch: int = 2, max_seq_len: int = 64,
+                     max_new_tokens: int = 6, seed: int = 0,
+                     **lm_overrides) -> Engine:
+    """Small seeded ``Engine``; LMConfig fields override via kwargs."""
+    import jax
+
+    from repro.models import transformer as T
+    lm_kw = dict(name="t", family="lm-dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
+                 max_seq_len=128)
+    lm_kw.update(lm_overrides)
+    lm = LMConfig(**lm_kw)
+    key = (tuple(sorted(lm_kw.items())), seed)
+    if key not in _PARAMS_CACHE:
+        _PARAMS_CACHE[key] = T.init_params(
+            lm, jax.random.PRNGKey(seed))[0]
+    return Engine(lm, _PARAMS_CACHE[key],
+                  EngineConfig(max_batch=max_batch,
+                               max_seq_len=max_seq_len,
+                               max_new_tokens=max_new_tokens))

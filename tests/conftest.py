@@ -54,6 +54,24 @@ def data_mesh():
     return mesh
 
 # ----------------------------------------------------------------------
+# shared serving-engine factory
+#
+# The serving suites (test_serving_prefill, test_serving_batch,
+# test_system) all need a tiny seeded LM behind an Engine; the shared
+# factory (also the benchmark baseline's engine source) caches
+# init_params per (config, seed) so every engine built from the same
+# recipe shares ONE parameter pytree — cheap to build and, for
+# differential tests, guaranteed-identical weights across engines.
+# ----------------------------------------------------------------------
+@pytest.fixture
+def engine_fixture():
+    """Factory fixture: ``engine_fixture(max_batch=2, ...)`` returns a
+    small seeded ``Engine``; LMConfig fields override via kwargs."""
+    from repro.serving.testing import make_test_engine
+    return make_test_engine
+
+
+# ----------------------------------------------------------------------
 # optional-hypothesis shim
 #
 # ``hypothesis`` is not installed in the offline CI image; property-test

@@ -2,43 +2,54 @@
 
 The engine groups active slots by cache length so requests admitted
 together share one ``decode_step`` launch per token; the pipeline's
-``answer_batch`` must agree with the per-question path.  Also exercises
-``benchmarks/run.py --smoke`` so the harness flag stays wired.
+``answer_batch`` must agree with the per-question path — including
+``mode='multihop'``, where round-1 retrieval, bridge extraction,
+round-2 retrieval, and the final reader pass each run once per
+question *block*.  Also exercises ``benchmarks/run.py --smoke`` so the
+harness flag stays wired.
 """
 import subprocess
 import sys
 
-import jax
-import numpy as np
 import pytest
 
-from repro.common.config import EraRAGConfig, LMConfig
+from repro.common.config import EraRAGConfig
 from repro.core.erarag import EraRAG
 from repro.data.corpus import SyntheticCorpus
 from repro.embed.hashing import HashingEmbedder
 from repro.serving.rag_pipeline import RAGPipeline
+
+pytestmark = pytest.mark.serving
 
 CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
                    max_layers=3, chunk_tokens=32, top_k=6,
                    token_budget=512)
 
 
-def _engine(max_batch=2):
-    from repro.models import transformer as T
-    from repro.serving.engine import Engine, EngineConfig
-    lm = LMConfig(name="t", family="lm-dense", n_layers=2, d_model=64,
-                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
-                  max_seq_len=128)
-    params, _ = T.init_params(lm, jax.random.PRNGKey(0))
-    return Engine(lm, params, EngineConfig(max_batch=max_batch,
-                                           max_seq_len=64,
-                                           max_new_tokens=6))
+@pytest.fixture(scope="module")
+def built():
+    corpus = SyntheticCorpus.generate(n_docs=24, n_topics=4, seed=0)
+    rag = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
+    rag.insert_docs(corpus.docs)
+    return rag, corpus
 
 
-def test_engine_microbatch_shares_launches():
+def _mixed_multihop_block(corpus):
+    """Two genuine two-hop questions (bridge retrievable), one
+    two-hop-shaped question whose bridge fact cannot be found (short-
+    circuits after round 1), and two plain questions."""
+    hop = [qa.question for qa in corpus.qa if qa.kind == "multihop"][:2]
+    assert len(hop) == 2
+    missing = "What is the color of the partner of ent_missing?"
+    plain = [qa.question for qa in corpus.qa
+             if qa.kind == "detailed"][:2]
+    return hop + [missing] + plain
+
+
+def test_engine_microbatch_shares_launches(engine_fixture):
     """Two requests admitted together decode in lock-step: strictly
     fewer kernel launches than (slot, token) steps."""
-    eng = _engine(max_batch=2)
+    eng = engine_fixture(max_batch=2)
     eng.submit("first question about alpha")
     eng.submit("second question about beta")
     eng.run_until_done()
@@ -47,27 +58,25 @@ def test_engine_microbatch_shares_launches():
     assert len(eng._results) == 2
 
 
-def test_engine_batched_matches_sequential():
+def test_engine_batched_matches_sequential(engine_fixture):
     """Micro-batched decode must not change any sequence: same prompts
     served one-at-a-time and concurrently yield identical tokens."""
     prompts = ["tell me about alpha beta", "gamma delta question",
                "epsilon zeta words"]
-    eng_seq = _engine(max_batch=1)   # one slot: fully sequential
+    eng_seq = engine_fixture(max_batch=1)   # one slot: fully sequential
     seq = [eng_seq.generate(p) for p in prompts]
-    eng_bat = _engine(max_batch=3)
+    eng_bat = engine_fixture(max_batch=3)
     bat = eng_bat.generate_batch(prompts)
     assert seq == bat
     assert eng_bat.stats["decode_launches"] < \
         eng_bat.stats["slot_steps"]
 
 
-def test_answer_batch_matches_answer():
-    corpus = SyntheticCorpus.generate(n_docs=24, n_topics=4, seed=0)
-    rag = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
-    rag.insert_docs(corpus.docs)
+def test_answer_batch_matches_answer(built):
+    rag, corpus = built
     pipe = RAGPipeline(rag)
     questions = [qa.question for qa in corpus.qa[:8]]
-    # include multihop questions: they take the per-question fallback
+    # two-hop questions route through the batched multihop machinery
     questions += [qa.question for qa in corpus.qa
                   if qa.kind == "multihop"][:2]
     batched = pipe.answer_batch(questions)
@@ -77,6 +86,66 @@ def test_answer_batch_matches_answer():
         assert a.context == b.context
         assert a.hits == b.hits
     assert pipe.answer_batch([]) == []
+
+
+def test_multihop_batch_matches_per_question(built):
+    """Reader path: ``answer_batch(mode='multihop')`` equals the
+    per-question oracle on a mixed block where some questions
+    short-circuit after round 1 and others take round 2."""
+    rag, corpus = built
+    pipe = RAGPipeline(rag)
+    block = _mixed_multihop_block(corpus)
+    rets = rag.query_batch(block, mode="multihop")
+    hops = [r.hops for r in rets]
+    assert 1 in hops and 2 in hops, hops      # genuinely mixed block
+    batched = pipe.answer_batch(block, mode="multihop")
+    single = [pipe.answer(q, mode="multihop") for q in block]
+    for a, b in zip(batched, single):
+        assert a.answer == b.answer
+        assert a.context == b.context
+        assert a.hits == b.hits
+        assert a.n_context_tokens == b.n_context_tokens
+    # the two genuine two-hop questions are actually answered
+    gold = [qa for qa in corpus.qa if qa.kind == "multihop"][:2]
+    assert all(qa.answer in a.answer
+               for qa, a in zip(gold, batched[:2]))
+
+
+def test_multihop_batch_two_rounds(built):
+    """A B-question multihop block costs exactly two batched retrieval
+    rounds — round 2 is grouped, never per-question."""
+    rag, corpus = built
+    pipe = RAGPipeline(rag)
+    block = _mixed_multihop_block(corpus)
+    before = rag.stats["retrieval_rounds"]
+    pipe.answer_batch(block, mode="multihop")
+    assert rag.stats["retrieval_rounds"] - before == 2
+    # all-short-circuit block: round 2 is skipped entirely
+    before = rag.stats["retrieval_rounds"]
+    pipe.answer_batch(["What is the color of the partner of "
+                       "ent_missing?"], mode="multihop")
+    assert rag.stats["retrieval_rounds"] - before == 1
+
+
+def test_multihop_engine_batch_matches_and_counts(built,
+                                                  engine_fixture):
+    """LM-reader path: the batched block runs bridge extraction and
+    the final read as ONE ``generate_batch`` launch each (exactly 2),
+    and is tokenwise equal to the sequential per-question oracle."""
+    rag, corpus = built
+    block = _mixed_multihop_block(corpus)
+    eng = engine_fixture(max_batch=len(block), max_new_tokens=4)
+    pipe = RAGPipeline(rag, engine=eng)
+    before = rag.stats["retrieval_rounds"]
+    batched = pipe.answer_batch(block, mode="multihop")
+    assert eng.stats["generate_batches"] == 2
+    assert rag.stats["retrieval_rounds"] - before == 2
+    # fresh engine, identical (cached) params: the sequential oracle
+    oracle_eng = engine_fixture(max_batch=1, max_new_tokens=4)
+    oracle = RAGPipeline(rag, engine=oracle_eng)
+    single = [oracle.answer(q, mode="multihop") for q in block]
+    assert [a.answer for a in batched] == [a.answer for a in single]
+    assert [a.context for a in batched] == [a.context for a in single]
 
 
 @pytest.mark.slow
@@ -91,4 +160,20 @@ def test_benchmark_smoke_flag():
         timeout=420)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "query_batch/parity" in out.stdout
+    assert "mismatches=0" in out.stdout
+
+
+@pytest.mark.slow
+def test_benchmark_smoke_serving_batch():
+    """`--smoke --only serving_batch` records BENCH_serving_batch.json
+    with launch sharing + parity asserted inside the sweep."""
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke",
+         "--only", "serving_batch"],
+        capture_output=True, text=True, cwd=".",
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "serving_batch/prefill_parity" in out.stdout
+    assert "serving_batch/multihop_parity" in out.stdout
     assert "mismatches=0" in out.stdout

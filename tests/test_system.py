@@ -79,17 +79,8 @@ def test_e2e_state_roundtrip_serves(built, tmp_path):
     assert [h.node_id for h in a.hits] == [h.node_id for h in b.hits]
 
 
-def test_engine_generates_and_frees_slots():
-    import jax
-    from repro.common.config import LMConfig
-    from repro.models import transformer as T
-    from repro.serving.engine import Engine, EngineConfig
-    lm = LMConfig(name="t", family="lm-dense", n_layers=2, d_model=64,
-                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
-                  max_seq_len=128)
-    params, _ = T.init_params(lm, jax.random.PRNGKey(0))
-    eng = Engine(lm, params, EngineConfig(max_batch=2, max_seq_len=64,
-                                          max_new_tokens=4))
+def test_engine_generates_and_frees_slots(engine_fixture):
+    eng = engine_fixture(max_batch=2, max_seq_len=64, max_new_tokens=4)
     rids = [eng.submit(f"question number {i}") for i in range(5)]
     eng.run_until_done()
     assert set(rids) == set(eng._results)
