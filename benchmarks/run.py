@@ -21,6 +21,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         initial_coverage,
         kernel_bench,
         query_batch,
+        reshard,
         roofline,
         segment_size,
         serving_batch,
@@ -44,6 +45,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         "query_batch": lambda: query_batch.run(n_docs=half),
         "serving_batch": lambda: serving_batch.run(n_docs=half),
         "sharded_store": lambda: sharded_store.run(n_docs=half),
+        # lifecycle migration vs full rebuild (parity + speedup
+        # asserted); below ~1000 rows the fixed dispatch overheads
+        # drown the replay-vs-restack signal, so keep a 120-doc floor
+        "reshard": lambda: reshard.run(n_docs=max(120, half)),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -62,6 +67,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # recording BENCH_serving_batch.json (parity asserted)
         suites["serving_batch"] = lambda: serving_batch.run(
             n_docs=24, n_prompts=6, batch=6)
+        # the reshard-vs-rebuild wall-clock needs enough rows for the
+        # signal (see above), so it keeps its 120-doc corpus in
+        # smoke; still seconds-scale, recording BENCH_reshard.json
+        suites["reshard"] = lambda: reshard.run(n_docs=120)
     return suites
 
 

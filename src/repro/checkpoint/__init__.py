@@ -1,5 +1,6 @@
 """Checkpointing: sharded npz save/restore, async writer, manifests."""
 from repro.checkpoint.store import CheckpointManager, load_checkpoint, \
-    save_checkpoint
+    load_manifest, save_checkpoint
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "load_checkpoint", "load_manifest",
+           "save_checkpoint"]

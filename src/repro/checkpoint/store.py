@@ -76,19 +76,32 @@ def save_checkpoint(path: Path, step: int, tree: Any,
     return final
 
 
+def _resolve_step_dir(path: Path, step: Optional[int]) -> Path:
+    path = Path(path)
+    if step is not None:
+        return path / f"step-{step:08d}"
+    cands = sorted(p for p in path.glob("step-*")
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    if not cands:
+        raise FileNotFoundError(f"no checkpoints in {path}")
+    return cands[-1]
+
+
+def load_manifest(path: Path,
+                  step: Optional[int] = None) -> Tuple[int, Dict]:
+    """Peek a checkpoint's ``(step, extra)`` without touching the
+    array payload — for callers (e.g. the lifecycle manager) that
+    need the metadata to size a template before the real load."""
+    final = _resolve_step_dir(path, step)
+    manifest = json.loads((final / "manifest.json").read_text())
+    return manifest["step"], manifest["extra"]
+
+
 def load_checkpoint(path: Path, step: Optional[int] = None,
                     template: Any = None) -> Tuple[int, Any, Dict]:
     """Load the given (or latest) step; verify digests; optionally
     restore into the structure of ``template`` (reshard-on-load)."""
-    path = Path(path)
-    if step is None:
-        cands = sorted(p for p in path.glob("step-*")
-                       if p.is_dir() and not p.name.endswith(".tmp"))
-        if not cands:
-            raise FileNotFoundError(f"no checkpoints in {path}")
-        final = cands[-1]
-    else:
-        final = path / f"step-{step:08d}"
+    final = _resolve_step_dir(path, step)
     manifest = json.loads((final / "manifest.json").read_text())
     data = np.load(final / "arrays.npz")
     by_key: Dict[str, np.ndarray] = {}
@@ -137,7 +150,10 @@ class CheckpointManager:
                    extra: Optional[Dict[str, Any]] = None) -> None:
         """Snapshot to host now; write in the background."""
         self.wait()
-        host_tree = jax.tree.map(np.asarray, tree)  # sync device->host
+        # device->host sync AND a host-side copy: np.asarray would
+        # alias an already-host ndarray, letting the caller's next
+        # mutation race the background write
+        host_tree = jax.tree.map(lambda x: np.array(x), tree)
 
         def work():
             try:
@@ -156,13 +172,17 @@ class CheckpointManager:
         self._gc()
         return out
 
-    def latest_step(self) -> Optional[int]:
+    def steps(self) -> List[int]:
+        """Completed (non-torn) checkpoint steps, ascending."""
         cands = sorted(p for p in self.path.glob("step-*")
                        if p.is_dir() and not p.name.endswith(".tmp"))
-        return int(cands[-1].name.split("-")[1]) if cands else None
+        return [int(p.name.split("-")[1]) for p in cands]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
 
     def _gc(self) -> None:
-        cands = sorted(p for p in self.path.glob("step-*")
-                       if p.is_dir() and not p.name.endswith(".tmp"))
-        for p in cands[:-self.keep]:
-            shutil.rmtree(p, ignore_errors=True)
+        for step in self.steps()[:-self.keep]:
+            shutil.rmtree(self.path / f"step-{step:08d}",
+                          ignore_errors=True)

@@ -256,6 +256,16 @@ class EraRAGConfig:
     # (auto-disabled when no multi-device mesh is available); False
     # keeps the per-shard dispatch loop (the parity oracle)
     collective_query: bool = True
+    # index lifecycle (repro.lifecycle): report-driven live resharding
+    # triggers, consulted by the store's refresh().  0.0 disables a
+    # trigger; with both disabled no policy is attached.  Skew is
+    # max/mean live rows per shard (grow the shard count); tombstone
+    # is the index-wide dead-row fraction (replay-compact at the same
+    # count).  Explicit control stays on EraRAG.reshard(n_shards).
+    reshard_skew_threshold: float = 0.0
+    reshard_tombstone_threshold: float = 0.0
+    reshard_min_rows: int = 256      # ignore toy indexes
+    reshard_max_shards: int = 64     # skew-growth ceiling
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -265,6 +275,14 @@ class EraRAGConfig:
             raise ValueError("retrieval_bias_p must be in [0, 1]")
         if self.index_shards < 0:
             raise ValueError("index_shards must be >= 0 (0 = auto)")
+        if self.reshard_skew_threshold < 0 \
+                or self.reshard_tombstone_threshold < 0:
+            raise ValueError("reshard thresholds must be >= 0 "
+                             "(0 disables)")
+        if self.reshard_min_rows < 0:
+            raise ValueError("reshard_min_rows must be >= 0")
+        if self.reshard_max_shards < 1:
+            raise ValueError("reshard_max_shards must be >= 1")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":
         """Tab V ablation: scale tolerance delta around the mean size."""

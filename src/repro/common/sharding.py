@@ -204,6 +204,16 @@ def db_axis_size(mesh: Mesh,
     return size
 
 
+def padded_slot_count(n_shards: int, axis_size: int) -> int:
+    """Slot count for a stacked shard buffer: the smallest multiple of
+    the shard-axis device count that fits ``n_shards`` — extra slots
+    stay permanently empty (dead-flagged) rather than ever collapsing
+    rows onto one device.  Shared by the live store and the lifecycle
+    resharder so old and new epochs always agree on the layout rule.
+    """
+    return -(-int(n_shards) // int(axis_size)) * int(axis_size)
+
+
 def stacked_db_shardings(mesh: Mesh,
                          rules: Optional[LogicalRules] = None
                          ) -> Tuple[NamedSharding, NamedSharding]:

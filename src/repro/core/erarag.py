@@ -8,6 +8,7 @@ benchmark harness reads them to reproduce the paper's figures.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Iterable, List, Optional, Sequence, Tuple
 
@@ -47,11 +48,39 @@ class EraRAG:
         self.tokenizer = HashTokenizer()
         self.graph = EraGraph(cfg, embedder, summarizer, self.tokenizer)
         self.store = make_store(self.graph, cfg, mesh)
+        self._attach_lifecycle()
         self.reports: List[UpdateReport] = []
         # batched-retrieval-round counter: every batched store sweep
         # (however many questions it serves) counts ONE round, so the
         # serving suite can assert a multihop block costs exactly two
         self.stats = {"retrieval_rounds": 0}
+
+    def _attach_lifecycle(self) -> None:
+        """Attach the config's reshard policy (if any thresholds are
+        enabled) so the store's refresh loop schedules and advances
+        live resharding migrations on its own."""
+        from repro.lifecycle.policy import LifecyclePolicy
+        policy = LifecyclePolicy.from_config(self.cfg)
+        if policy is not None:
+            self.store.attach_lifecycle(policy)
+
+    def reshard(self, n_shards: int) -> AnyStore:
+        """Explicitly change the index shard count NOW (synchronous
+        epoch-swapped migration — rows replay out of the live buffers,
+        no re-embedding, results bitwise-equal to a fresh build at the
+        target count).  Sharded-to-sharded migrations swap in place
+        (``self.store`` object identity preserved); ``n_shards == 1``
+        returns to the single-buffer store, and a flat store reshards
+        into a new ``ShardedVectorStore`` — either way ``self.store``
+        is the store to use afterwards."""
+        from repro.lifecycle.reshard import Resharder
+        resharder = Resharder(mesh=self.mesh,
+                              collective=self.cfg.collective_query)
+        self.store = resharder.reshard(self.store, n_shards)
+        self.cfg = dataclasses.replace(self.cfg,
+                                       index_shards=int(n_shards))
+        self._attach_lifecycle()
+        return self.store
 
     # ------------------------------------------------------------------
     def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
@@ -136,9 +165,15 @@ class EraRAG:
         obj = cls(cfg, embedder, summarizer, mesh=mesh)
         obj.graph = EraGraph.from_state(state, embedder, summarizer)
         if "store" in state:
+            # cfg.index_shards is the desired layout (0 = auto keeps
+            # the snapshot's); a disagreement with the snapshot routes
+            # through the lifecycle Resharder replay, never a ghost
+            # layout or a full re-embed
             obj.store = store_from_state(state["store"], obj.graph,
                                          mesh=mesh,
+                                         n_shards=cfg.index_shards,
                                          collective=cfg.collective_query)
         else:
             obj.store = make_store(obj.graph, cfg, mesh)
+        obj._attach_lifecycle()
         return obj

@@ -40,6 +40,11 @@ class Retrieval:
     hits: List[Hit]
     context: str
     n_tokens: int
+    # index epoch that served the scan (bumped by every committed
+    # reshard migration — lets the serving layer attribute an answer
+    # to a pre- or post-migration index, and the lifecycle suite
+    # assert that queries issued mid-migration served the OLD epoch)
+    epoch: int = 0
 
 
 @dataclass
@@ -79,8 +84,11 @@ def collapsed_search_batch(graph, store: AnyStore, query_embs,
                            ) -> List[Retrieval]:
     tok = tokenizer or HashTokenizer()
     hits_b = store.search_batch(np.asarray(query_embs), k)
-    return [_budgeted(graph, hits, token_budget, tok)
-            for hits in hits_b]
+    out = [_budgeted(graph, hits, token_budget, tok)
+           for hits in hits_b]
+    for r in out:
+        r.epoch = store.epoch
+    return out
 
 
 def collapsed_search(graph, store: AnyStore, query_emb, k: int,
@@ -117,6 +125,8 @@ def adaptive_search_batch(graph, store: AnyStore, query_embs,
         hits = prim + rest
         hits.sort(key=lambda h: -h.score)
         out.append(_budgeted(graph, hits, token_budget, tok))
+    for r in out:
+        r.epoch = store.epoch
     return out
 
 
@@ -216,13 +226,14 @@ def multihop_search_batch(graph, store: AnyStore, embed,
     follow = [i for i, b in enumerate(bridges) if b]
     r2 = _round([bridges[i] for i in follow]) if follow else []
     out = [HopRetrieval(hits=list(r.hits), context=r.context,
-                        n_tokens=r.n_tokens, hops=1, rounds=(r,))
+                        n_tokens=r.n_tokens, epoch=r.epoch, hops=1,
+                        rounds=(r,))
            for r in r1]
     for i, rb in zip(follow, r2):
         ra = r1[i]
         out[i] = HopRetrieval(
             hits=list(ra.hits) + list(rb.hits),
             context=ra.context + "\n" + rb.context,
-            n_tokens=ra.n_tokens + rb.n_tokens,
+            n_tokens=ra.n_tokens + rb.n_tokens, epoch=rb.epoch,
             hops=2, bridge_query=bridges[i], rounds=(ra, rb))
     return out

@@ -57,6 +57,18 @@ tombstoned rows are masked anyway, making the deferral bitwise
 invisible.  ``compact()`` stays as the forced, flush-everything escape
 hatch.
 
+Lifecycle (``repro.lifecycle``): the shard count is no longer frozen
+at construction.  ``refresh()`` runs one lifecycle turn per call —
+consult the attached ``LifecyclePolicy`` (skew / tombstone thresholds)
+for a ``ReshardPlan``, build ONE staged target shard of an in-flight
+``ShardMigration``, and, when the staging epoch is complete, commit it
+with an atomic ``install_epoch`` swap (the migration analogue of the
+compaction double buffer: queries issued mid-migration always serve
+the OLD epoch, and the replayed store is bitwise-identical to a fresh
+build at the target shard count).  ``export_rows`` is the replay
+source; each store owns a private routing LRU (``_Router``) whose
+hit/miss/bulk counters are exactly its own traffic.
+
 Invariants (asserted by ``tests/test_store_sharded.py`` and
 ``tests/test_store_collective.py``):
 
@@ -137,11 +149,14 @@ class StoreStats:
     # the one-shard-per-refresh rotation (they compact on a later turn)
     rows_compacted: int = 0
     growths: int = 0
-    # id-routing cache movement since the store existed (the cache
-    # itself is process-global — see routing_cache_info)
+    # id-routing cache movement (per store instance — each store owns
+    # its routing LRU, so counters never bleed across stores/tests)
     route_hits: int = 0
     route_misses: int = 0
     bulk_routed: int = 0
+    # lifecycle: epoch-swapped live resharding (see repro.lifecycle)
+    reshards: int = 0        # committed epoch swaps
+    reshard_steps: int = 0   # staged target shards built by refresh()
 
 
 # ---------------------------------------------------------------------------
@@ -154,8 +169,6 @@ _ROUTE_LRU_SIZE = 1 << 16
 # thrash) while paying the cache bookkeeping on top of the hashing
 _BULK_ROUTE_MIN = 4096
 
-_bulk_routed = 0  # ids routed via the LRU-bypass bulk pass
-
 
 def _route(node_id: str, n_shards: int) -> int:
     """Stable owning shard of a node id (pure content hash — identical
@@ -164,40 +177,76 @@ def _route(node_id: str, n_shards: int) -> int:
     return int.from_bytes(h, "big") % n_shards
 
 
-# A small LRU absorbs the delta path asking for the same id up to three
-# times (stale check, tombstone routing, append routing) without
-# pinning the whole corpus's ids for the process lifetime; bulk paths
-# go around it (shard_of_many).
-shard_of = functools.lru_cache(maxsize=_ROUTE_LRU_SIZE)(_route)
-
-
-def shard_of_many(ids: Sequence[str], n_shards: int) -> np.ndarray:
-    """Route an id batch in one pass.
-
-    Small batches (the O(delta) incremental path) go through the
-    ``shard_of`` LRU; batches at/above ``_BULK_ROUTE_MIN`` (full
-    rebuilds / replays) bypass it — one blake2 sweep over the ids, then
-    a single vectorized big-endian reduce + mod — so bulk routing never
-    thrashes the cache the hot path depends on.
-    """
-    global _bulk_routed
-    ids = list(ids)
-    if len(ids) < _BULK_ROUTE_MIN:
-        return np.fromiter((shard_of(i, n_shards) for i in ids),
-                           np.int64, count=len(ids))
-    _bulk_routed += len(ids)
+def _bulk_route(ids: List[str], n_shards: int) -> np.ndarray:
+    """One blake2 sweep over the ids, then a single vectorized
+    big-endian reduce + mod — the LRU-bypass bulk pass."""
     raw = b"".join(hashlib.blake2b(i.encode(), digest_size=8).digest()
                    for i in ids)
     h = np.frombuffer(raw, dtype=">u8")
     return (h % np.uint64(n_shards)).astype(np.int64)
 
 
+class _Router:
+    """One routing cache + its counters.
+
+    A small LRU absorbs the delta path asking for the same id up to
+    three times (stale check, tombstone routing, append routing)
+    without pinning the whole corpus's ids; batches at/above
+    ``_BULK_ROUTE_MIN`` (full rebuilds / replays) bypass it so bulk
+    routing never thrashes the cache the hot path depends on.
+
+    Every store owns a PRIVATE instance, so its ``route_hits`` /
+    ``route_misses`` / ``bulk_routed`` stats are exactly its own
+    traffic — they can never bleed across stores or test cases the way
+    a process-global counter does.  The cache key includes
+    ``n_shards``, so a live reshard (new shard count) never needs an
+    invalidation sweep.  The module-level ``shard_of`` /
+    ``shard_of_many`` / ``routing_cache_info`` utilities are one
+    shared process-global instance of the same class.
+    """
+
+    def __init__(self):
+        self.cached = functools.lru_cache(
+            maxsize=_ROUTE_LRU_SIZE)(_route)
+        self.bulk_routed = 0
+
+    def one(self, node_id: str, n_shards: int) -> int:
+        return self.cached(node_id, n_shards)
+
+    def many(self, ids: Sequence[str], n_shards: int) -> np.ndarray:
+        ids = list(ids)
+        if len(ids) < _BULK_ROUTE_MIN:
+            return np.fromiter(
+                (self.cached(i, n_shards) for i in ids),
+                np.int64, count=len(ids))
+        self.bulk_routed += len(ids)
+        return _bulk_route(ids, n_shards)
+
+    def info(self) -> Dict[str, int]:
+        info = self.cached.cache_info()
+        return {"hits": info.hits, "misses": info.misses,
+                "size": info.currsize, "maxsize": info.maxsize,
+                "bulk_routed": self.bulk_routed}
+
+    def reset(self) -> None:
+        self.cached.cache_clear()
+        self.bulk_routed = 0
+
+
+_global_router = _Router()
+shard_of = _global_router.cached
+
+
+def shard_of_many(ids: Sequence[str], n_shards: int) -> np.ndarray:
+    """Route an id batch in one pass (process-global cache)."""
+    return _global_router.many(ids, n_shards)
+
+
 def routing_cache_info() -> Dict[str, int]:
-    """Hit/miss visibility for the process-global routing LRU."""
-    info = shard_of.cache_info()
-    return {"hits": info.hits, "misses": info.misses,
-            "size": info.currsize, "maxsize": info.maxsize,
-            "bulk_routed": _bulk_routed}
+    """Counters of the process-global routing utilities (each store
+    reports its own traffic through
+    ``AnyStore.routing_cache_info()``)."""
+    return _global_router.info()
 
 
 # ---------------------------------------------------------------------------
@@ -610,18 +659,42 @@ class _Shard:
         self.group.ensure(n)
         self._grow_host(n)
         self.row_ids = ids
-        self.row_layers[:n] = np.asarray(state["row_layers"], np.int32)
+        layers = np.asarray(state["row_layers"], np.int32)
+        self.row_layers[:n] = layers
         self.row_seq[:n] = np.asarray(state["row_seq"], np.int64)
         self.group.write_rows(self.slot, 0, buf, self.row_seq[:n])
         alive = np.asarray(state["alive"], bool)
         self.alive[:n] = alive
         self.count = n
         self.n_dead = int(n - alive.sum())
-        for row, nid in enumerate(ids):
-            if alive[row]:
-                self.row_of[nid] = row
-                cls = "summary" if self.row_layers[row] > 0 else "leaf"
-                self.n_alive[cls] += 1
+        # vectorized alive bookkeeping: this is the reshard-replay hot
+        # path (every staged target shard loads through here)
+        live = np.nonzero(alive)[0]
+        self.row_of = {ids[int(r)]: int(r) for r in live}
+        n_sum = int(np.count_nonzero(layers[live] > 0))
+        self.n_alive = {"summary": n_sum, "leaf": len(live) - n_sum}
+
+
+def pack_export_rows(ids: List[str], layers: List[np.ndarray],
+                     seqs: List[np.ndarray], rows: List[np.ndarray],
+                     dim: int) -> Dict[str, np.ndarray]:
+    """Assemble the canonical replay payload from per-shard alive-row
+    pieces: ``{"ids", "layers", "seqs", "rows"}``, globally sorted by
+    sequence number.  The single definition of the row-export contract
+    — used by the live ``export_rows`` and the snapshot replay
+    (``lifecycle.reshard.rows_from_state``), so the two sources can
+    never drift."""
+    if not ids:
+        return {"ids": np.zeros((0,), dtype="<U1"),
+                "layers": np.zeros((0,), np.int32),
+                "seqs": np.zeros((0,), np.int64),
+                "rows": np.zeros((0, dim + N_FLAGS), np.float32)}
+    seq_all = np.concatenate(seqs)
+    order = np.argsort(seq_all, kind="stable")
+    return {"ids": np.asarray(ids)[order],
+            "layers": np.concatenate(layers)[order],
+            "seqs": seq_all[order],
+            "rows": np.concatenate(rows)[order]}
 
 
 def _filter_bias(layer_filter: Optional[str]) -> Tuple[float, ...]:
@@ -656,12 +729,23 @@ class _BaseStore:
         self._version = -1          # graph version the index reflects
         self._next_seq = 0          # global row insertion order
         self._compact_threshold = float(compact_threshold)
-        # merged-candidate id resolution for the sharded paths
-        self._seq_map: Dict[int, Tuple[str, int]] = {}
+        # merged-candidate id resolution for the sharded paths:
+        # seq -> (node_id, layer, owning shard)
+        self._seq_map: Dict[int, Tuple[str, int, int]] = {}
         self._track_seq_map = False
         # rotating, double-buffered compaction state
         self._pending: Optional[Tuple[int, np.ndarray, tuple]] = None
         self._compact_rr = 0
+        # lifecycle state (see repro.lifecycle): the index epoch is
+        # bumped by every committed reshard migration; `_migration` is
+        # the staged (not yet installed) target epoch being built one
+        # shard per refresh(); `_policy` is the pluggable trigger that
+        # refresh() consults to start one
+        self.epoch = 0
+        self._migration = None      # Optional[lifecycle ShardMigration]
+        self._policy = None         # Optional[LifecyclePolicy]
+        self._router = _Router()    # per-instance routing LRU+counters
+        self.query_hits = np.zeros(1, np.int64)  # per-shard hit skew
 
     def owner(self, node_id: str) -> int:
         raise NotImplementedError
@@ -688,7 +772,7 @@ class _BaseStore:
             b_seqs.append(self._next_seq)
             if self._track_seq_map:
                 self._seq_map[self._next_seq] = (
-                    nid, int(nodes[nid].layer))
+                    nid, int(nodes[nid].layer), int(s))
             self._next_seq += 1
         for s, (b_ids, b_seqs) in buckets.items():
             self._shards[s].append(nodes, b_ids, b_seqs)
@@ -714,11 +798,11 @@ class _BaseStore:
 
     def _rebuild_seq_map(self) -> None:
         self._seq_map.clear()
-        for sh in self._shards:
+        for s, sh in enumerate(self._shards):
             for r in range(sh.count):
                 if sh.alive[r]:
                     self._seq_map[int(sh.row_seq[r])] = (
-                        sh.row_ids[r], int(sh.row_layers[r]))
+                        sh.row_ids[r], int(sh.row_layers[r]), s)
 
     def _tombstone(self, ids: Sequence[str]) -> None:
         if not ids:
@@ -745,6 +829,9 @@ class _BaseStore:
 
     def _full_rebuild(self) -> None:
         self._pending = None   # stale double buffer: drop, never swap
+        self._migration = None  # staged epoch rows are stale too:
+        # abort the migration (the policy will re-trigger if still
+        # warranted) rather than install rows a re-stack superseded
         self._group.reset()
         for sh in self._shards:
             sh.reset()
@@ -776,30 +863,72 @@ class _BaseStore:
         keep, compacted = self._shards[pick].schedule_compact()
         self._pending = (pick, keep, compacted)
 
+    def _advance_migration(self) -> None:
+        """Lifecycle turn (explicit ``refresh()`` only): build at most
+        ONE staged target shard of an in-flight reshard migration —
+        same one-unit-of-background-work-per-refresh discipline as the
+        compaction rotation — and, once every target shard is built,
+        install the new epoch with one atomic swap.  The install
+        rewinds ``_version`` to the migration's plan version, so the
+        replay loop below it brings the NEW epoch up to date through
+        the graph's delta-log tail."""
+        mig = self._migration
+        if mig is None:
+            return
+        if not mig.done:
+            mig.step()
+            self._store_stats.reshard_steps += 1
+        if mig.done:
+            self._migration = None
+            mig.install()
+
+    def _maybe_start_reshard(self) -> None:
+        """Consult the attached lifecycle policy (skew / tombstone
+        thresholds) for a reshard plan; at most one migration is in
+        flight at a time."""
+        if self._policy is None or self._migration is not None:
+            return
+        plan = self._policy.decide(self)
+        if plan is None:
+            return
+        from repro.lifecycle.reshard import ShardMigration
+        logger.info("lifecycle: starting reshard %d -> %d (%s)",
+                    plan.n_from, plan.n_to, plan.reason)
+        self._migration = ShardMigration(self, plan)
+
     def _refresh(self, force_commit: bool = False) -> None:
         g = self._graph
-        if self._version == g.version:
+        if self._version == g.version and not force_commit:
             # version-synced queries take this hot path: they never
-            # commit (or depend on) a staged compaction — only an
-            # explicit refresh()/compact() swaps the double buffer in
-            if force_commit:
-                self._commit_pending_compaction()
+            # commit (or depend on) a staged compaction or advance a
+            # migration — only an explicit refresh()/compact() does,
+            # so a query issued mid-migration always serves the OLD
+            # epoch unchanged
             return
         # a replay turn swaps in the previously staged compaction
         # FIRST: the gather had a full inter-refresh window to
         # complete, and the delta replay below must see the committed
         # row layout
         self._commit_pending_compaction()
-        self._store_stats.refreshes += 1
-        deltas = g.deltas_since(self._version) \
-            if hasattr(g, "deltas_since") else None
-        if deltas is None:
-            self._full_rebuild()
-        else:
-            for added, removed in deltas:
-                self._apply_delta(added, removed)
-        self._schedule_threshold_compaction()
-        self._version = g.version
+        if force_commit:
+            # one lifecycle turn per explicit refresh: build one
+            # staged target shard, or commit the finished epoch swap
+            # (which rewinds _version to the plan version — the replay
+            # below then applies the delta tail to the new epoch)
+            self._advance_migration()
+        if self._version != g.version:
+            self._store_stats.refreshes += 1
+            deltas = g.deltas_since(self._version) \
+                if hasattr(g, "deltas_since") else None
+            if deltas is None:
+                self._full_rebuild()
+            else:
+                for added, removed in deltas:
+                    self._apply_delta(added, removed)
+            self._schedule_threshold_compaction()
+            self._version = g.version
+        if force_commit:
+            self._maybe_start_reshard()
 
     def _valid_count(self, layer_filter: Optional[str]) -> int:
         return sum(sh.valid_count(layer_filter)
@@ -833,6 +962,59 @@ class _BaseStore:
         """Shard index whose compaction is staged in the double buffer
         (swapped in at the next refresh), or None."""
         return self._pending[0] if self._pending is not None else None
+
+    # ------------------------------------------------------------------
+    # lifecycle (see repro.lifecycle: load reports, live resharding)
+    # ------------------------------------------------------------------
+    def attach_lifecycle(self, policy) -> None:
+        """Attach a ``LifecyclePolicy``: every explicit ``refresh()``
+        consults it and may start (then advance, one target shard per
+        call) an epoch-swapped reshard migration."""
+        self._policy = policy
+
+    @property
+    def migration(self):
+        """The in-flight ``ShardMigration`` (staging epoch being built
+        off the query path), or None."""
+        return self._migration
+
+    def routing_cache_info(self) -> Dict[str, int]:
+        """This store's private routing-LRU counters (never another
+        store's traffic — the cache is per instance)."""
+        return self._router.info()
+
+    def export_rows(self) -> Dict[str, np.ndarray]:
+        """Alive rows in global-sequence order, captured to host: the
+        replay source for the lifecycle ``Resharder``.  Returns
+        ``{"ids", "layers", "seqs", "rows"}`` where ``rows`` is the
+        ``(n, d + N_FLAGS)`` device-buffer content (embeddings + flag
+        columns) — replaying these into a freshly-routed buffer at any
+        shard count reproduces search results bitwise, because scores
+        come from the identical float rows and the merge tie-break
+        only depends on the (preserved) relative sequence order."""
+        self._refresh()
+        ids: List[str] = []
+        layers: List[np.ndarray] = []
+        seqs: List[np.ndarray] = []
+        rows: List[np.ndarray] = []
+        # ONE device->host transfer for the whole stack (read_rows per
+        # shard would sync once per slot)
+        stack = np.asarray(self._group.buf) \
+            if self._group.buf is not None else None
+        for sh in self._shards:
+            n = sh.count
+            if n == 0:
+                continue
+            keep = np.nonzero(sh.alive[:n])[0]
+            if len(keep) == 0:
+                continue
+            buf = stack[:n] if stack.ndim == 2 else stack[sh.slot, :n]
+            ids.extend(sh.row_ids[int(r)] for r in keep)
+            layers.append(sh.row_layers[:n][keep])
+            seqs.append(sh.row_seq[:n][keep])
+            rows.append(np.asarray(buf[keep], np.float32))
+        return pack_export_rows(ids, layers, seqs, rows,
+                                self._group.dim)
 
     @property
     def size(self) -> int:
@@ -894,6 +1076,7 @@ class VectorStore(_BaseStore):
                 Hit(node_id=self._s.row_ids[int(r)], score=float(v),
                     layer=int(self._s.row_layers[int(r)]))
                 for v, r in zip(vals[b], idx[b])])
+        self.query_hits[0] += sum(len(hits) for hits in out)
         return out
 
     # ------------------------------------------------------------------
@@ -951,7 +1134,8 @@ class ShardedVectorStore(_BaseStore):
         axis_size = 1
         if mesh is not None:
             from repro.common.sharding import db_axis_size, \
-                db_shard_axes, shard_placements, stacked_db_shardings
+                db_shard_axes, padded_slot_count, shard_placements, \
+                stacked_db_shardings
             axes = db_shard_axes(mesh, rules)
             if not axes:
                 raise ValueError(
@@ -976,7 +1160,7 @@ class ShardedVectorStore(_BaseStore):
             # the stacked slot dim must divide the shard axes: pad with
             # permanently-empty slots (all rows dead-flagged) rather
             # than ever collapsing rows onto one device
-            n_slots = -(-self.n_shards // axis_size) * axis_size
+            n_slots = padded_slot_count(self.n_shards, axis_size)
             if n_slots != self.n_shards:
                 logger.warning(
                     "ShardedVectorStore: %d shards padded to %d slots "
@@ -997,15 +1181,13 @@ class ShardedVectorStore(_BaseStore):
         self._shards = [_Shard(dim, self._group, s)
                         for s in range(self.n_shards)]
         self._track_seq_map = True
-        # routing counters are process-global; report deltas since this
-        # store existed so its stats aren't another store's traffic
-        self._route_base = routing_cache_info()
+        self.query_hits = np.zeros(self.n_shards, np.int64)
 
     def owner(self, node_id: str) -> int:
-        return shard_of(node_id, self.n_shards)
+        return self._router.one(node_id, self.n_shards)
 
     def owner_many(self, ids: Sequence[str]) -> np.ndarray:
-        return shard_of_many(ids, self.n_shards)
+        return self._router.many(ids, self.n_shards)
 
     @property
     def collective_active(self) -> bool:
@@ -1015,9 +1197,10 @@ class ShardedVectorStore(_BaseStore):
     @property
     def stats(self) -> StoreStats:
         """Aggregate counters: store-level refresh/rebuild/compaction-
-        rotation counts, per-shard staging/tombstone/compaction sums,
-        and routing-cache hit/miss movement since this store existed
-        (the cache is process-global; deltas keep attribution)."""
+        rotation/reshard counts, per-shard staging/tombstone/compaction
+        sums, and this instance's own routing-cache movement (each
+        store owns its routing LRU, so the counters are exactly its
+        traffic — never another store's or a test neighbor's)."""
         agg = StoreStats(**vars(self._store_stats))
         for sh in self._shards:
             agg.rows_staged += sh.stats.rows_staged
@@ -1025,12 +1208,10 @@ class ShardedVectorStore(_BaseStore):
             agg.compactions += sh.stats.compactions
             agg.rows_compacted += sh.stats.rows_compacted
             agg.growths += sh.stats.growths
-        route = routing_cache_info()
-        agg.route_hits = route["hits"] - self._route_base["hits"]
-        agg.route_misses = \
-            route["misses"] - self._route_base["misses"]
-        agg.bulk_routed = \
-            route["bulk_routed"] - self._route_base["bulk_routed"]
+        route = self._router.info()
+        agg.route_hits = route["hits"]
+        agg.route_misses = route["misses"]
+        agg.bulk_routed = route["bulk_routed"]
         return agg
 
     def shard_stats(self) -> List[StoreStats]:
@@ -1046,6 +1227,7 @@ class ShardedVectorStore(_BaseStore):
             "capacity": sh.capacity,
             "staged": sh.stats.rows_staged,
             "compactions": sh.stats.compactions,
+            "query_hits": int(self.query_hits[s]),
             "compact_pending": pending == s,
             "device": str(self._placements[s])
             if self._placements[s] is not None else None,
@@ -1080,7 +1262,8 @@ class ShardedVectorStore(_BaseStore):
         for b in range(n_q):
             hits: List[Hit] = []
             for v, s in zip(mv[b], ms[b]):
-                nid, layer = self._seq_map[int(s)]
+                nid, layer, shard = self._seq_map[int(s)]
+                self.query_hits[shard] += 1
                 hits.append(Hit(node_id=nid, score=float(v),
                                 layer=layer))
             out.append(hits)
@@ -1117,6 +1300,39 @@ class ShardedVectorStore(_BaseStore):
         return merge_sharded_topk(vals, seqs, k_eff)
 
     # ------------------------------------------------------------------
+    # lifecycle: atomic epoch swap (reshard commit)
+    # ------------------------------------------------------------------
+    def install_epoch(self, staging: "ShardedVectorStore") -> None:
+        """Atomically adopt ``staging``'s fully-built buffers, shards,
+        and routing as this store's next epoch (the reshard commit).
+
+        Every query dispatched before this call served the OLD epoch's
+        stacked buffer untouched; after it, the store routes and scans
+        at the new shard count.  ``_version`` rewinds to the staging
+        snapshot's version, so the caller (``_refresh``'s replay loop,
+        or the synchronous ``Resharder``) replays the graph's delta
+        tail into the new epoch; a pending old-epoch compaction gather
+        is dropped — its layout no longer exists."""
+        assert staging._graph is self._graph, "epoch from another graph"
+        self._pending = None
+        self._compact_rr = 0
+        self._group = staging._group
+        self._group.stats = self._store_stats
+        self._shards = staging._shards
+        self.n_shards = staging.n_shards
+        self.mesh = staging.mesh
+        self._axis_names = staging._axis_names
+        self._collective_capable = staging._collective_capable
+        self._placements = staging._placements
+        self._seq_map = staging._seq_map
+        self._version = staging._version
+        # appends after the swap must stay above every replayed seq
+        self._next_seq = max(self._next_seq, staging._next_seq)
+        self.query_hits = np.zeros(self.n_shards, np.int64)
+        self.epoch += 1
+        self._store_stats.reshards += 1
+
+    # ------------------------------------------------------------------
     # persistence
     # ------------------------------------------------------------------
     def state_dict(self) -> dict:
@@ -1131,9 +1347,21 @@ class ShardedVectorStore(_BaseStore):
 
     @classmethod
     def from_state(cls, state: dict, graph, *, mesh=None,
+                   n_shards: Optional[int] = None,
                    **kw) -> "ShardedVectorStore":
-        store = cls(graph, n_shards=int(state["n_shards"]), mesh=mesh,
-                    **kw)
+        """Restore a snapshot.  ``n_shards`` (None/0 = keep the
+        snapshot's layout) may disagree with the snapshot: the rows
+        are then replayed through the lifecycle ``Resharder`` into a
+        freshly-routed store at the requested count — never loaded
+        into a mismatched (ghost) layout, and never a full O(N)
+        re-embed."""
+        snap = int(state["n_shards"])
+        want = snap if not n_shards else int(n_shards)
+        if want != snap:
+            from repro.lifecycle.reshard import Resharder
+            return Resharder(mesh=mesh, **kw).replay_state(
+                state, graph, want)
+        store = cls(graph, n_shards=snap, mesh=mesh, **kw)
         for sh, sh_state in zip(store._shards, state["shards"]):
             sh.load_state(sh_state)
         store._rebuild_seq_map()
@@ -1145,10 +1373,25 @@ class ShardedVectorStore(_BaseStore):
 AnyStore = Union[VectorStore, ShardedVectorStore]
 
 
-def store_from_state(state: dict, graph, *, mesh=None, **kw) -> AnyStore:
-    """Restore whichever store kind ``state`` was saved from."""
+def store_from_state(state: dict, graph, *, mesh=None,
+                     n_shards: Optional[int] = None, **kw) -> AnyStore:
+    """Restore whichever store kind ``state`` was saved from.
+
+    ``n_shards`` (None/0 = respect the snapshot's layout) reshards the
+    snapshot through the lifecycle ``Resharder`` when it disagrees —
+    including across kinds (flat snapshot -> sharded store and back).
+    """
+    want = int(n_shards) if n_shards else None
     if state.get("kind") == "sharded":
+        if want is not None and want != int(state["n_shards"]):
+            from repro.lifecycle.reshard import Resharder
+            return Resharder(mesh=mesh, **kw).replay_state(
+                state, graph, want, flat=want == 1)
         return ShardedVectorStore.from_state(state, graph, mesh=mesh,
                                              **kw)
+    if want is not None and want != 1:
+        from repro.lifecycle.reshard import Resharder
+        return Resharder(mesh=mesh, **kw).replay_state(state, graph,
+                                                       want)
     kw.pop("collective", None)   # flat store has no dispatch modes
     return VectorStore.from_state(state, graph, **kw)

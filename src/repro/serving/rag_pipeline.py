@@ -89,13 +89,19 @@ class RAGPipeline:
         self.engine = engine  # optional LM reader
 
     def index_report(self) -> dict:
-        """Serving-side index health: size + refresh counters, plus the
-        per-shard row/dead-ratio breakdown when the store is sharded
-        over the data mesh axis (dashboards / capacity planning)."""
+        """Serving-side index health: size + refresh counters, the
+        lifecycle ``ShardLoadReport`` (per-shard live-row / tombstone /
+        query-hit skew, routing-cache counters, epoch, in-flight
+        reshard migration), plus the per-shard breakdown when the
+        store is sharded over the data mesh axis (dashboards /
+        capacity planning / reshard decisions)."""
+        from repro.lifecycle.report import ShardLoadReport
         store = self.rag.store
         report = {"size": store.size, "stats": dict(vars(store.stats)),
                   "retrieval_rounds":
-                      self.rag.stats["retrieval_rounds"]}
+                      self.rag.stats["retrieval_rounds"],
+                  "epoch": store.epoch,
+                  "load": ShardLoadReport.from_store(store).to_dict()}
         if hasattr(store, "shard_report"):
             report["shards"] = store.shard_report()
             # dispatch mode + rotating-compaction state: a dashboard

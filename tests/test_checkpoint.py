@@ -1,0 +1,118 @@
+"""``checkpoint.CheckpointManager`` coverage: async save/``wait()``,
+``keep=`` rotation, digest round-trip/integrity, template restore —
+the substrate the lifecycle's epoch-versioned snapshots depend on.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointManager, \
+    load_checkpoint, save_checkpoint
+
+
+def _tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal((3,)).astype(np.float32),
+            "names": np.asarray(["alpha", "beta"]),
+            "steps": np.arange(5, dtype=np.int64)}
+
+
+def _assert_tree_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]),
+                                      np.asarray(b[k]))
+
+
+def test_save_load_roundtrip_with_digests(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 3, tree, extra={"note": "hello"})
+    step, by_key, extra = load_checkpoint(tmp_path)
+    assert step == 3 and extra == {"note": "hello"}
+    got = {k.strip("[']"): v for k, v in by_key.items()}
+    _assert_tree_equal(tree, got)
+    # template restore (structure + shape check path)
+    template = {k: 0 for k in tree}
+    step, restored, _ = load_checkpoint(tmp_path, template=template)
+    _assert_tree_equal(tree, restored)
+
+
+def test_digest_mismatch_detected(tmp_path):
+    save_checkpoint(tmp_path, 1, _tree())
+    final = tmp_path / "step-00000001"
+    manifest = json.loads((final / "manifest.json").read_text())
+    key = next(iter(manifest["arrays"]))
+    manifest["arrays"][key]["digest"] = "0" * 16   # torn write
+    (final / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(IOError):
+        load_checkpoint(tmp_path)
+
+
+def test_template_shape_mismatch_and_missing_key(tmp_path):
+    save_checkpoint(tmp_path, 1, _tree())
+    bad = dict(_tree())
+    bad["w"] = np.zeros((9, 9), np.float32)   # wrong shape
+    with pytest.raises(ValueError):
+        load_checkpoint(tmp_path, template=bad)
+    extra_key = dict(_tree())
+    extra_key["missing"] = np.zeros((1,))
+    with pytest.raises(KeyError):
+        load_checkpoint(tmp_path, template=extra_key)
+
+
+def test_async_save_wait_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    assert mgr.latest_step() is None
+    assert mgr.steps() == []
+    tree = _tree()
+    mgr.save_async(1, tree, extra={"k": 1})
+    mgr.wait()   # writer joined: the checkpoint is durable now
+    assert mgr.latest_step() == 1
+    step, by_key, extra = load_checkpoint(tmp_path)
+    assert step == 1 and extra == {"k": 1}
+    # a second save_async implicitly waits for the first
+    mgr.save_async(2, tree)
+    mgr.save_async(3, tree)
+    mgr.wait()
+    assert mgr.steps() == [1, 2, 3]
+
+
+def test_async_snapshot_is_mutation_safe(tmp_path):
+    """save_async snapshots to host synchronously: mutating the tree
+    right after the call must not corrupt the write."""
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    want = {k: np.array(v, copy=True) for k, v in tree.items()}
+    mgr.save_async(1, tree)
+    tree["w"][:] = -1.0
+    mgr.wait()
+    _, restored, _ = load_checkpoint(tmp_path,
+                                     template={k: 0 for k in want})
+    np.testing.assert_array_equal(restored["w"], want["w"])
+
+
+def test_keep_rotation_prunes_old_steps(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in range(1, 6):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [4, 5]
+    # the survivors still load clean (rotation never tears them)
+    step, by_key, _ = load_checkpoint(tmp_path)
+    assert step == 5
+    _, _, _ = load_checkpoint(tmp_path, step=4)
+
+
+def test_async_error_propagates_on_wait(tmp_path):
+    target = tmp_path / "not-a-dir"
+    target.write_text("file in the way")
+    mgr = CheckpointManager(target / "ckpt", keep=2)
+    mgr.save_async(1, _tree())
+    with pytest.raises(BaseException):
+        mgr.wait()
+    # the error is cleared: the manager is reusable afterwards
+    mgr2 = CheckpointManager(tmp_path / "ok", keep=2)
+    mgr2.save_async(1, _tree())
+    mgr2.wait()
+    assert mgr2.latest_step() == 1

@@ -1,0 +1,579 @@
+"""Differential suite for the index lifecycle subsystem
+(``repro.lifecycle``): load-report-driven live resharding with
+epoch-swapped migration.
+
+The contract, held to the same standard as the sharded/collective
+suites (no float tolerance anywhere):
+
+- ``reshard(s -> s')`` results are BITWISE identical to a store
+  freshly built at s' — across growth, tombstone churn, layer
+  filters, and post-reshard incremental inserts;
+- queries issued mid-migration are answered from the OLD epoch,
+  untouched (and carry its epoch stamp);
+- the policy trigger starts a migration from ``refresh()`` and
+  advances it ONE target shard per call (the compaction-rotation
+  discipline);
+- ``from_state`` with a disagreeing shard count replays through the
+  Resharder — no ghost layout, no full rebuild, delta tail intact;
+- a half-finished migration snapshot restores and RESUMES.
+"""
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.erarag import EraRAG
+from repro.core.graph import EraGraph
+from repro.core.retrieve import collapsed_search_batch
+from repro.core.store import ShardedVectorStore, VectorStore, \
+    store_from_state
+from repro.data.chunker import Chunk
+from repro.embed.hashing import HashingEmbedder
+from repro.lifecycle import LifecycleManager, LifecyclePolicy, \
+    Resharder, ShardLoadReport
+
+pytestmark = pytest.mark.lifecycle
+
+CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
+                   max_layers=3, chunk_tokens=32)
+_EMB = HashingEmbedder(dim=CFG.embed_dim)
+_WORDS = ["alpha", "beta", "gamma", "delta", "epsilon", "zeta",
+          "eta", "theta", "iota", "kappa"]
+
+
+def _mk_chunks(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        words = [_WORDS[int(w)] for w in
+                 rng.integers(0, len(_WORDS), size=12)]
+        out.append(Chunk(chunk_id=f"c{seed}-{i:04d}",
+                         doc_id=f"d{i % 5}",
+                         text=f"Chunk {i} says " + " ".join(words) + ".",
+                         n_tokens=15))
+    return out
+
+
+def _queries(seed: int, n: int = 4) -> np.ndarray:
+    texts = [f"what does chunk {i} say about "
+             f"{_WORDS[i % len(_WORDS)]}?" for i in range(n)]
+    return _EMB.encode(texts)
+
+
+def _hits_key(hits):
+    return [(h.node_id, h.score, h.layer) for h in hits]
+
+
+def _assert_matches_fresh(store, graph, queries, n_shards, k=6):
+    """Bitwise oracle: a store freshly built at the target count."""
+    fresh = ShardedVectorStore(graph, n_shards=n_shards)
+    fresh.rebuild()
+    for filt in (None, "leaf", "summary"):
+        got = store.search_batch(queries, k, layer_filter=filt)
+        want = fresh.search_batch(queries, k, layer_filter=filt)
+        for hg, hw in zip(got, want):
+            assert _hits_key(hg) == _hits_key(hw), (filt, hg, hw)
+
+
+# ----------------------------------------------------------------------
+# bitwise parity: reshard == fresh build at the target count
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_from,n_to", [(3, 5), (4, 2), (2, 7)])
+def test_reshard_matches_fresh_build_bitwise(n_from, n_to):
+    """Grow and shrink a live store (summary churn supplies the
+    tombstones) and hold the replayed epoch to the fresh-build
+    oracle, then keep inserting — the new routing must stay on the
+    incremental path AND stay correct."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=n_from,
+                               compact_threshold=0.05)
+    chunks = _mk_chunks(n_from, 70)
+    for i in range(0, len(chunks), 16):   # staged: summary churn
+        g.insert_chunks(chunks[i:i + 16])
+        store.refresh()
+    queries = _queries(n_from)
+    assert store.stats.rows_tombstoned > 0  # churn happened
+
+    out = Resharder().reshard(store, n_to)
+    assert out is store          # sharded -> sharded swaps in place
+    assert store.n_shards == n_to
+    assert store.epoch == 1
+    assert store.stats.reshards == 1
+    _assert_matches_fresh(store, g, queries, n_to)
+
+    # post-reshard inserts: incremental, correct, same routing
+    g.insert_chunks(_mk_chunks(n_from + 100, 25))
+    store.refresh()
+    assert store.stats.full_rebuilds == 0, store.stats
+    _assert_matches_fresh(store, g, queries, n_to)
+
+
+def test_reshard_to_flat_and_back():
+    """n_to == 1 returns to the single-buffer store (mirroring
+    make_store); a flat store reshards into a new sharded one — both
+    directions bitwise against the flat oracle."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=3)
+    g.insert_chunks(_mk_chunks(11, 50))
+    queries = _queries(11)
+    oracle = VectorStore(g)
+    oracle.refresh()
+
+    flat = Resharder().reshard(store, 1)
+    assert isinstance(flat, VectorStore)
+    # the epoch survives kind changes: answers attributed post-
+    # migration never compare lower than pre-migration ones
+    assert flat.epoch == store.epoch + 1
+    assert flat.stats.reshards == 1
+    for filt in (None, "leaf", "summary"):
+        a = flat.search_batch(queries, 6, layer_filter=filt)
+        b = oracle.search_batch(queries, 6, layer_filter=filt)
+        for ha, hb in zip(a, b):
+            assert _hits_key(ha) == _hits_key(hb)
+
+    sharded = Resharder().reshard(flat, 4)
+    assert isinstance(sharded, ShardedVectorStore)
+    assert sharded.n_shards == 4
+    assert sharded.epoch == flat.epoch + 1
+    _assert_matches_fresh(sharded, g, queries, 4)
+    # the new store keeps tracking the graph incrementally
+    g.insert_chunks(_mk_chunks(12, 15))
+    sharded.refresh()
+    assert sharded.stats.full_rebuilds == 0
+    _assert_matches_fresh(sharded, g, queries, 4)
+
+
+# ----------------------------------------------------------------------
+# mid-migration serving: the old epoch answers until the atomic swap
+# ----------------------------------------------------------------------
+
+def test_queries_mid_migration_serve_old_epoch():
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    g.insert_chunks(_mk_chunks(21, 60))
+    queries = _queries(21)
+    store.refresh()
+    before = [_hits_key(h) for h in store.search_batch(queries, 6)]
+    ep_before = [r.epoch for r in collapsed_search_batch(
+        g, store, queries, 6, CFG.token_budget)]
+
+    mig = Resharder().begin(store, 5, "test")
+    while not mig.done:
+        mig.step()
+        # between every staged shard build: the store serves the OLD
+        # epoch bitwise-unchanged, stamped with the old epoch id
+        rets = collapsed_search_batch(g, store, queries, 6,
+                                      CFG.token_budget)
+        assert [_hits_key(r.hits) for r in rets] == before
+        assert [r.epoch for r in rets] == ep_before
+        assert store.epoch == 0
+    mig.install()
+    assert store.epoch == 1
+    rets = collapsed_search_batch(g, store, queries, 6,
+                                  CFG.token_budget)
+    assert [r.epoch for r in rets] == [1] * len(queries)
+    _assert_matches_fresh(store, g, queries, 5)
+
+
+def test_growth_during_migration_replays_into_new_epoch():
+    """Deltas absorbed by the old epoch mid-migration must land in
+    the new epoch after the swap (the install rewinds the store
+    version to the plan version and replays the tail)."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    g.insert_chunks(_mk_chunks(31, 40))
+    queries = _queries(31)
+    store.refresh()
+
+    mig = Resharder().begin(store, 4, "growth-test")
+    mig.step()
+    g.insert_chunks(_mk_chunks(32, 20))   # grows the OLD epoch
+    store.refresh()   # old epoch absorbs the delta while staging runs
+    mig.run()
+    mig.install()
+    store.refresh()   # replay the tail into the new epoch
+    assert store.stats.full_rebuilds == 0
+    _assert_matches_fresh(store, g, queries, 4)
+
+
+# ----------------------------------------------------------------------
+# policy-driven lifecycle: refresh() schedules and advances
+# ----------------------------------------------------------------------
+
+def test_policy_migration_advances_one_shard_per_refresh():
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    store.attach_lifecycle(LifecyclePolicy(skew_threshold=1.0001,
+                                           min_rows=10,
+                                           growth_factor=2))
+    g.insert_chunks(_mk_chunks(41, 40))
+    queries = _queries(41)
+    store.refresh()     # consults the policy -> schedules a migration
+    assert store.migration is not None
+    assert store.epoch == 0
+    # one staged target shard per refresh; queries in between are
+    # served (old epoch) without advancing anything
+    steps = 0
+    while store.epoch == 0:
+        store.search_batch(queries, 6)
+        assert store.migration is None or not store.migration.done
+        store.refresh()
+        steps += 1
+        assert steps <= 8, "migration never committed"
+    assert steps == 4    # 4 target shards -> 4 step turns
+    assert store.n_shards == 4
+    assert store.stats.reshard_steps == 4
+    assert store.stats.reshards == 1
+    _assert_matches_fresh(store, g, queries, 4)
+
+
+def test_policy_tombstone_trigger_replays_at_same_width():
+    """The tombstone trigger is a whole-index compaction through the
+    migration path: same shard count, dead rows dropped, epoch
+    bumped."""
+    g = EraGraph(CFG, _EMB)
+    # threshold 1.0 never compacts per-shard, so tombstones pile up
+    store = ShardedVectorStore(g, n_shards=3, compact_threshold=1.0)
+    chunks = _mk_chunks(51, 60)
+    for i in range(0, len(chunks), 12):   # staged: summary churn
+        g.insert_chunks(chunks[i:i + 12])
+        store.refresh()
+    assert sum(sh.n_dead for sh in store._shards) > 0
+    queries = _queries(51)
+    store.attach_lifecycle(LifecyclePolicy(tombstone_threshold=0.05,
+                                           min_rows=10))
+    store.refresh()
+    assert store.migration is not None, \
+        ShardLoadReport.from_store(store)
+    while store.epoch == 0:
+        store.refresh()
+    assert store.n_shards == 3
+    assert sum(sh.n_dead for sh in store._shards) == 0
+    _assert_matches_fresh(store, g, queries, 3)
+
+
+def test_explicit_reshard_preempts_policy_migration():
+    """An explicit reshard while a policy-scheduled migration is in
+    flight aborts the staged epoch (never installed, old epoch never
+    touched) and runs the requested one instead."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    store.attach_lifecycle(LifecyclePolicy(skew_threshold=1.0001,
+                                           min_rows=10))
+    g.insert_chunks(_mk_chunks(65, 40))
+    queries = _queries(65)
+    store.refresh()
+    assert store.migration is not None   # policy scheduled 2 -> 4
+    out = Resharder().reshard(store, 3)  # explicit preempts
+    assert out is store and store.n_shards == 3
+    assert store.epoch == 1
+    _assert_matches_fresh(store, g, queries, 3)
+
+
+def test_policy_ignores_small_and_flat_stores():
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    store.attach_lifecycle(LifecyclePolicy(skew_threshold=1.0001,
+                                           min_rows=10 ** 6))
+    g.insert_chunks(_mk_chunks(61, 30))
+    store.refresh()
+    assert store.migration is None     # min_rows gate
+    flat = VectorStore(g)
+    flat.attach_lifecycle(LifecyclePolicy(skew_threshold=1.0001,
+                                          min_rows=1))
+    flat.refresh()
+    assert flat.migration is None      # flat stores don't self-reshard
+
+
+# ----------------------------------------------------------------------
+# EraRAG facade + config plumbing
+# ----------------------------------------------------------------------
+
+def test_erarag_reshard_facade():
+    rag = EraRAG(EraRAGConfig(**{**vars(CFG), "index_shards": 3}),
+                 _EMB)
+    docs = [(f"doc{i}", f"Document {i} about " +
+             " ".join(_WORDS[(i + j) % len(_WORDS)]
+                      for j in range(20)))
+            for i in range(12)]
+    rag.insert_docs(docs)
+    queries = _queries(71)
+    before = [_hits_key(h)
+              for h in rag.store.search_batch(queries, 6)]
+    store = rag.reshard(5)
+    assert store is rag.store and store.n_shards == 5
+    assert rag.cfg.index_shards == 5
+    _assert_matches_fresh(store, rag.graph, queries, 5)
+    # the swap is invisible to callers: same hits, scores included
+    after = [_hits_key(h) for h in rag.store.search_batch(queries, 6)]
+    assert after == before
+    flat = rag.reshard(1)
+    assert isinstance(flat, VectorStore) and rag.cfg.index_shards == 1
+
+
+def test_config_thresholds_attach_policy():
+    cfg = EraRAGConfig(**{**vars(CFG), "index_shards": 2,
+                          "reshard_skew_threshold": 1.0001,
+                          "reshard_min_rows": 10})
+    rag = EraRAG(cfg, _EMB)
+    assert rag.store._policy is not None
+    docs = [(f"doc{i}", f"Document {i} about " +
+             " ".join(_WORDS[(i + j) % len(_WORDS)]
+                      for j in range(20)))
+            for i in range(10)]
+    rag.insert_docs(docs)
+    rag.store.refresh()
+    assert rag.store.migration is not None
+    while rag.store.epoch == 0:
+        rag.store.refresh()
+    assert rag.store.n_shards == 4
+    with pytest.raises(ValueError):
+        EraRAGConfig(reshard_skew_threshold=-1.0)
+
+
+# ----------------------------------------------------------------------
+# from_state: snapshot / config shard-count disagreement
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_to", [1, 2, 6])
+def test_from_state_shard_mismatch_replays(n_to):
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=4)
+    g.insert_chunks(_mk_chunks(81, 50))
+    state = store.state_dict()
+    queries = _queries(81)
+
+    g2 = EraGraph.from_state(g.state_dict(), _EMB)
+    restored = store_from_state(state, g2, n_shards=n_to)
+    if n_to == 1:
+        assert isinstance(restored, VectorStore)
+    else:
+        assert isinstance(restored, ShardedVectorStore)
+        assert restored.n_shards == n_to
+    assert restored.stats.full_rebuilds == 0
+    _assert_matches_fresh(restored, g2, queries, max(n_to, 1))
+
+    # the delta tail stays intact: a post-restore insert is O(delta)
+    staged0 = restored.stats.rows_staged
+    rep = g2.insert_chunks(_mk_chunks(82, 5))
+    restored.refresh()
+    staged = restored.stats.rows_staged - staged0
+    assert restored.stats.full_rebuilds == 0
+    assert staged <= 5 + rep.n_resummarized, staged
+    _assert_matches_fresh(restored, g2, queries, max(n_to, 1))
+
+
+def test_from_state_explicit_classmethod_mismatch():
+    """ShardedVectorStore.from_state(n_shards=...) — previously an
+    undefined/ghost-layout hazard — now routes through the Resharder
+    replay."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=3)
+    g.insert_chunks(_mk_chunks(91, 40))
+    state = store.state_dict()
+    restored = ShardedVectorStore.from_state(state, g, n_shards=5)
+    assert restored.n_shards == 5
+    _assert_matches_fresh(restored, g, _queries(91), 5)
+    # matching / omitted counts keep the fast direct-load path
+    same = ShardedVectorStore.from_state(state, g)
+    assert same.n_shards == 3
+
+
+def test_flat_snapshot_restores_into_sharded():
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    g.insert_chunks(_mk_chunks(95, 40))
+    state = flat.state_dict()
+    restored = store_from_state(state, g, n_shards=4)
+    assert isinstance(restored, ShardedVectorStore)
+    _assert_matches_fresh(restored, g, _queries(95), 4)
+
+
+# ----------------------------------------------------------------------
+# load reports
+# ----------------------------------------------------------------------
+
+def test_shard_load_report_counters_and_isolation():
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=3)
+    g.insert_chunks(_mk_chunks(101, 40))
+    queries = _queries(101)
+    store.search_batch(queries, 6)
+    rep = ShardLoadReport.from_store(store)
+    assert rep.n_shards == 3 and rep.epoch == 0
+    assert rep.size == len(g.nodes)
+    assert sum(ld.rows for ld in rep.shards) == rep.size
+    assert sum(ld.query_hits for ld in rep.shards) == 6 * len(queries)
+    assert rep.skew >= 1.0 and rep.query_skew >= 1.0
+    assert 0.0 <= rep.tombstone_fraction < 1.0
+    assert rep.routing["misses"] > 0
+    d = rep.to_dict()
+    assert d["shards"][0]["rows"] == rep.shards[0].rows
+
+    # per-instance isolation: a second store's traffic (including a
+    # module-level bulk route) never shows in the first store's stats
+    from repro.core.store import shard_of_many, _BULK_ROUTE_MIN
+    base = store.routing_cache_info()
+    other = ShardedVectorStore(g, n_shards=5)
+    other.refresh()
+    shard_of_many([f"bleed-{i}" for i in range(_BULK_ROUTE_MIN)], 4)
+    now = store.routing_cache_info()
+    assert now == base
+    assert store.stats.bulk_routed == base["bulk_routed"]
+    # flat stores report too (single shard)
+    flat = VectorStore(g)
+    flat.search_batch(queries, 6)
+    frep = ShardLoadReport.from_store(flat)
+    assert frep.n_shards == 1
+    assert frep.shards[0].query_hits == 6 * len(queries)
+
+
+def test_pipeline_index_report_exposes_load():
+    from repro.serving.rag_pipeline import RAGPipeline
+    rag = EraRAG(EraRAGConfig(**{**vars(CFG), "index_shards": 3}),
+                 _EMB)
+    rag.insert_docs([(f"d{i}", f"Document {i} about alpha beta "
+                      f"gamma delta epsilon zeta") for i in range(8)])
+    pipe = RAGPipeline(rag)
+    pipe.answer_batch(["what about alpha?", "what about beta?"])
+    report = pipe.index_report()
+    assert report["epoch"] == 0
+    load = report["load"]
+    assert load["n_shards"] == 3
+    assert sum(s["query_hits"] for s in load["shards"]) > 0
+    assert load["routing"]["misses"] > 0
+    assert report["shards"][0]["query_hits"] == \
+        load["shards"][0]["query_hits"]
+
+
+# ----------------------------------------------------------------------
+# mesh placement: the new epoch lives on the data axis too
+# ----------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_reshard_on_mesh_keeps_collective_parity(data_mesh):
+    """Resharding a mesh-placed store installs a staging epoch whose
+    stacked buffer is laid out over the same db_shards axes —
+    including a target count that does not divide the device count
+    (padded slots) — and the one-launch collective query at the new
+    count stays bitwise-equal to the flat store."""
+    g = EraGraph(CFG, _EMB)
+    flat = VectorStore(g)
+    store = ShardedVectorStore(g, n_shards=4, mesh=data_mesh)
+    g.insert_chunks(_mk_chunks(131, 60))
+    queries = _queries(131)
+    store.refresh()
+    out = Resharder().reshard(store, 3)   # 3 shards on 4 devices
+    assert out is store and store.n_shards == 3
+    assert store.collective_active
+    for filt in (None, "leaf", "summary"):
+        a = store.search_batch(queries, 6, layer_filter=filt)
+        b = flat.search_batch(queries, 6, layer_filter=filt)
+        for ha, hb in zip(a, b):
+            assert _hits_key(ha) == _hits_key(hb)
+    # and the loop-dispatch oracle agrees post-swap
+    store.collective = False
+    a = store.search_batch(queries, 6)
+    b = flat.search_batch(queries, 6)
+    for ha, hb in zip(a, b):
+        assert _hits_key(ha) == _hits_key(hb)
+
+
+# ----------------------------------------------------------------------
+# epoch-versioned snapshots: resume / replay a half-done migration
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("resume", [True, False])
+def test_manager_snapshot_restores_half_finished_migration(tmp_path,
+                                                           resume):
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    g.insert_chunks(_mk_chunks(111, 40))
+    store.refresh()
+    queries = _queries(111)
+    mgr = LifecycleManager(store, tmp_path)
+
+    mig = Resharder().begin(store, 4, "snapshot-test")
+    store._migration = mig   # hand it to the refresh loop
+    mig.step()               # 1 of 4 target shards built
+    step = mgr.snapshot(block=True)
+    assert step == 1
+
+    restored = mgr.restore(g, resume=resume)
+    assert restored.migration is not None
+    assert len(restored.migration.built) == (1 if resume else 0)
+    turns = 0
+    while restored.epoch == 0:
+        restored.refresh()
+        turns += 1
+        assert turns <= 6
+    assert turns == (3 if resume else 4)   # resumed shards are free
+    assert restored.n_shards == 4
+    _assert_matches_fresh(restored, g, queries, 4)
+
+
+@pytest.mark.slow
+def test_benchmark_smoke_reshard():
+    """`--smoke --only reshard` records BENCH_reshard.json with the
+    migration-vs-rebuild wall-clock, mid-migration availability, and
+    bitwise parity asserted inside the suite."""
+    import os
+    import subprocess
+    import sys
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke",
+         "--only", "reshard"],
+        capture_output=True, text=True, cwd=".",
+        env={**os.environ, "PYTHONPATH": "src"},
+        timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "reshard/availability" in out.stdout
+    assert "reshard/migrate" in out.stdout
+    assert "old_epoch_bitwise=1" in out.stdout
+
+
+def test_manager_snapshot_roundtrip_without_migration(tmp_path):
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=3)
+    g.insert_chunks(_mk_chunks(121, 30))
+    store.refresh()
+    store.epoch = 2   # pretend two reshards happened
+    mgr = LifecycleManager(store, tmp_path)
+    mgr.snapshot()          # async
+    mgr.wait()
+    restored = mgr.restore(g)
+    assert restored.epoch == 2
+    assert restored.migration is None
+    _assert_matches_fresh(restored, g, _queries(121), 3)
+    # keep-rotation: repeated snapshots retain the last k
+    for _ in range(4):
+        mgr.snapshot(block=True)
+    assert len(mgr.ckpt.steps()) == 3
+
+
+def test_manager_async_snapshots_never_collide(tmp_path):
+    """Back-to-back async snapshots must land on DISTINCT steps: the
+    step is computed after joining the in-flight writer, so a pending
+    write can't make two snapshots overwrite each other."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2)
+    g.insert_chunks(_mk_chunks(141, 20))
+    store.refresh()
+    mgr = LifecycleManager(store, tmp_path)
+    steps = [mgr.snapshot() for _ in range(3)]
+    mgr.wait()
+    assert steps == [1, 2, 3]
+    assert mgr.ckpt.steps() == [1, 2, 3]
+
+
+def test_reshard_to_flat_inherits_maintenance_tuning():
+    """The n_to==1 path keeps the source's compaction threshold and
+    growth floor, exactly like sharded-target staging does."""
+    g = EraGraph(CFG, _EMB)
+    store = ShardedVectorStore(g, n_shards=2, compact_threshold=0.05,
+                               min_capacity=8)
+    g.insert_chunks(_mk_chunks(151, 20))
+    flat = Resharder().reshard(store, 1)
+    assert isinstance(flat, VectorStore)
+    assert flat._compact_threshold == store._compact_threshold
+    assert flat._group.min_capacity == 8

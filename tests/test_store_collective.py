@@ -368,8 +368,9 @@ def test_routing_cache_counters_and_bulk_bypass():
     info2 = routing_cache_info()
     assert info2["misses"] >= info1["misses"] + len(small)
     assert info2["hits"] >= info1["hits"] + len(small)
-    # stats surface the movement ATTRIBUTED to this store: traffic
-    # from before its construction is excluded, its own replay counts
+    # stats surface ONLY this store's own movement: each store owns a
+    # private routing LRU, so neither earlier traffic nor another
+    # store's (nor the module-level utilities') ever bleeds in
     g = EraGraph(CFG, _EMB)
     sharded = ShardedVectorStore(g, n_shards=4)
     assert sharded.stats.route_misses == 0
@@ -379,5 +380,14 @@ def test_routing_cache_counters_and_bulk_bypass():
     stats = sharded.stats
     assert stats.route_hits + stats.route_misses > 0, stats
     big = [f"bulk2-{i}" for i in range(store_mod._BULK_ROUTE_MIN)]
-    shard_of_many(big, 4)
-    assert sharded.stats.bulk_routed >= len(big)
+    shard_of_many(big, 4)          # module-level bulk traffic...
+    other = ShardedVectorStore(g, n_shards=4)
+    other.refresh()                # ...and another store's replay...
+    after = sharded.stats
+    assert after.bulk_routed == 0  # ...leave this store's counters
+    assert after.route_hits == stats.route_hits      # untouched
+    assert after.route_misses == stats.route_misses
+    # the instance counters agree with the instance cache info
+    info = sharded.routing_cache_info()
+    assert info["hits"] == after.route_hits
+    assert info["misses"] == after.route_misses

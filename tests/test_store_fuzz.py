@@ -1,5 +1,7 @@
 """Store-level property fuzz: random append / tombstone / compact /
-rebuild interleavings, checked two ways —
+rebuild / reshard interleavings (the reshard action migrates the
+sharded store to a random shard count mid-sequence through the
+lifecycle epoch swap), checked two ways —
 
 1. against a brute-force NumPy oracle (alive rows in insertion order,
    top-k by (-score, insertion position) — exactly the store's
@@ -27,6 +29,7 @@ from conftest import (HealthCheck, given, requires_hypothesis, settings,
                       st)
 
 from repro.core.store import ShardedVectorStore, VectorStore
+from repro.lifecycle import Resharder
 
 DIM = 16
 
@@ -146,7 +149,7 @@ def run_script(seed: int, n_steps: int = 18) -> None:
     removed_pool: List[str] = []
     for step in range(n_steps):
         op = rng.choice(["add", "add", "remove", "readd", "compact",
-                         "rebuild"])
+                         "rebuild", "reshard"])
         if op == "add" or not (oracle.order or removed_pool):
             m = int(rng.integers(1, 9))
             items = []
@@ -177,6 +180,14 @@ def run_script(seed: int, n_steps: int = 18) -> None:
         elif op == "rebuild":
             flat.rebuild()
             sharded.rebuild()
+        elif op == "reshard":
+            # live epoch-swapped migration to a random shard count
+            # (grow or shrink) — the flat oracle is untouched, so the
+            # per-step differential check below holds the resharded
+            # store to bitwise parity mid-sequence
+            n_to = int(rng.integers(1, 6))
+            out = Resharder().reshard(sharded, n_to, flat=False)
+            assert out is sharded and sharded.n_shards == n_to
         # check after every step, all filters
         for filt in (None, "leaf", "summary"):
             want = oracle.search_batch(queries, 5, filt)
