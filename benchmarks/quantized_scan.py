@@ -1,0 +1,348 @@
+"""Two-stage quantized retrieval vs the exact dense scan.
+
+Measures the tentpole trade the compressed code plane buys: the exact
+single-stage scan streams every ``(cap, d + F)`` float32 row per query
+batch, while the two-stage pipeline scans ``(cap, n_words)`` packed
+uint32 sign-bit codes (~23x fewer bytes per row at 64 bits over
+d=256) and rescores only the top-C gathered candidates in exact fp32.
+Reported at a small serving batch — the regime the coarse scan is for:
+the dense scan's cost is row-buffer traffic and barely drops with
+batch size, while the coarse plane's traffic is ~n_words/(d+F) of it.
+
+The benchmark corpus is topic-clustered normalized embeddings at
+serving scale, driven through the REAL ``VectorStore`` /
+``ShardedVectorStore`` code paths (graph deltas, tombstones,
+compaction, epoch-swapped resharding).  Hyperplane LSH presupposes
+angular structure — EraRAG's own segmentation premise (paper §III.B);
+a hashing bag-of-words embedder over tiny synthetic docs yields
+near-isotropic vectors whose top-10 inner products are near-ties that
+NO sublinear index can rank, so recall there measures the corpus, not
+the scan (`text_corpus` rows report exactly this as context).
+
+Asserted invariants (abort-nonzero via benchmarks.run):
+  - recall@10 >= 0.95 vs the exact oracle at the serving operating
+    point (coarse_mult=4, scan_bits=64), re-checked after tombstone
+    churn, after compaction, and after a mid-benchmark reshard;
+  - rescored scores are bitwise-equal to the exact scan's for every
+    matched id (the rescore never approximates);
+  - with full coarse coverage the two-stage result is bitwise-equal
+    to the exact scan, flat and sharded, post-churn and post-reshard;
+  - at signal scale (>= ~20k rows) the two-stage QPS beats the exact
+    scan's at the asserted recall floor.
+
+Writes ``BENCH_quantized.json`` with the QPS / recall / bytes-scanned
+sweep so the perf trajectory records across commits.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.store import ShardedVectorStore, VectorStore
+from repro.launch.mesh import local_data_mesh
+from repro.lifecycle import Resharder
+
+DIM = 256          # matches configs.erarag.ERARAG_QUANTIZED
+SCAN_BITS = 64
+SCAN_SEED = 7
+COARSE_MULT = 4    # serving operating point (asserted floor)
+TOP_K = 10
+BATCH = 8          # small serving batch: the coarse scan's regime
+RECALL_FLOOR = 0.95
+# below this the fixed dispatch overheads drown the bytes-scanned
+# signal on CPU hosts, so the QPS win is reported but not asserted
+QPS_ASSERT_ROWS = 20_000
+_FULL = 10 ** 9    # coarse_mult large enough to clamp C to capacity
+
+
+# ---------------------------------------------------------------------------
+# minimal delta-log graph (the protocol EraGraph speaks; same shape as
+# the differential suite's ScriptGraph so the stores run their real
+# refresh / tombstone / compact paths)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Cfg:
+    embed_dim: int = DIM
+
+
+@dataclass
+class _Node:
+    embedding: np.ndarray
+    layer: int
+
+
+class _BenchGraph:
+    def __init__(self):
+        self.cfg = _Cfg()
+        self.nodes: Dict[str, _Node] = {}
+        self.version = 0
+        self._log = {0: ((), ())}
+
+    def add(self, items):
+        for nid, emb, layer in items:
+            self.nodes[nid] = _Node(np.asarray(emb, np.float32), layer)
+        self.version += 1
+        self._log[self.version] = (tuple(i[0] for i in items), ())
+
+    def remove(self, ids):
+        for nid in ids:
+            self.nodes.pop(nid, None)
+        self.version += 1
+        self._log[self.version] = ((), tuple(ids))
+
+    def deltas_since(self, version: int):
+        if version == self.version:
+            return []
+        if version > self.version:
+            return None
+        span = range(version + 1, self.version + 1)
+        if any(v not in self._log for v in span):
+            return None
+        return [self._log[v] for v in span]
+
+
+def _clustered(rng, n: int, n_topics: int, d: int = DIM,
+               spread: float = 0.4):
+    """Topic-clustered normalized embeddings — angular structure at
+    roughly constant per-topic density (the structure hyperplane LSH
+    presupposes and real embedding models produce)."""
+    centers = rng.standard_normal((n_topics, d)).astype(np.float32)
+
+    def sample(m):
+        v = centers[rng.integers(0, n_topics, size=m)] \
+            + spread * rng.standard_normal((m, d)).astype(np.float32)
+        return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+    return sample(n), sample
+
+
+def _best_time(fn, repeats: int = 5) -> float:
+    fn()  # warm up (jit/compile)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _recall(want, got) -> float:
+    num = den = 0
+    for w, g in zip(want, got):
+        ids = set(h.node_id for h in w)
+        den += len(ids)
+        num += len(ids & set(h.node_id for h in g))
+    return num / max(den, 1)
+
+
+def _assert_score_parity(want, got, tag: str) -> None:
+    """Every id the two-stage scan returns that the exact scan also
+    returns must carry the IDENTICAL fp32 score — the rescore is the
+    dense kernel's arithmetic, never an approximation."""
+    bad = 0
+    for w, g in zip(want, got):
+        exact = {h.node_id: h.score for h in w}
+        bad += sum(1 for h in g
+                   if h.node_id in exact and h.score != exact[h.node_id])
+    assert bad == 0, f"{tag}: {bad} rescored scores != exact fp32"
+
+
+def _assert_bitwise(want, got, tag: str) -> None:
+    for w, g in zip(want, got):
+        assert [(h.node_id, h.score, h.layer) for h in w] == \
+            [(h.node_id, h.score, h.layer) for h in g], tag
+
+
+def _full_coverage_check(exact, quant, q, tag: str) -> None:
+    """With C clamped to capacity the candidate set is total: the
+    two-stage result must be bitwise-equal to the exact scan."""
+    mult = quant.coarse_mult
+    quant.coarse_mult = _FULL
+    try:
+        _assert_bitwise(exact.search_batch(q, TOP_K),
+                        quant.search_batch(q, TOP_K), tag)
+    finally:
+        quant.coarse_mult = mult
+
+
+def _scan_bytes(store, quant: bool, union: int) -> int:
+    """Worst-case bytes touched by one query batch: the coarse plane
+    streams every code word; the rescore gathers at most the candidate
+    union of fp32 rows (the exact scan streams ALL of them)."""
+    grp = store._group
+    cap = int(np.prod(grp.buf.shape[:-1]))
+    row_b = grp.buf.shape[-1] * 4
+    if not quant:
+        return cap * row_b
+    return cap * grp.quant.n_words * 4 + min(union, cap) * row_b
+
+
+def _text_corpus_context(n_docs: int) -> str:
+    """Context row: the same scan over the synthetic TEXT pipeline
+    (hashing bag-of-words embedder).  Those embeddings are
+    near-isotropic — top-10 inner products are near-ties with no
+    angular margin for ANY sublinear index — so coarse recall here
+    characterizes the embedder, not the scan (reported, not floored;
+    the full-coverage bitwise contract still holds and is asserted by
+    the differential suite on every corpus)."""
+    from benchmarks.common import SYSTEMS, bench_corpus
+    corpus = bench_corpus(n_docs=n_docs)
+    rag = SYSTEMS["erarag"]()
+    rag.insert_docs(corpus.docs)
+    exact = rag.store
+    quant = VectorStore(rag.graph, quantized=True,
+                        coarse_mult=COARSE_MULT, scan_bits=SCAN_BITS,
+                        scan_seed=SCAN_SEED)
+    q = rag.embedder.encode(
+        [qa.question for qa in corpus.qa[:BATCH]])
+    rec = _recall(exact.search_batch(q, TOP_K),
+                  quant.search_batch(q, TOP_K))
+    return f"rows={exact.size};recall_unfloored={rec:.3f}"
+
+
+def run(n_docs: int = 40, rows_per_doc: int = 800,
+        n_shards: Optional[int] = None,
+        out_json: Optional[str] = "BENCH_quantized.json"
+        ) -> List[str]:
+    n_rows = n_docs * rows_per_doc
+    n_topics = max(64, n_rows // 25)
+    rng = np.random.default_rng(0)
+    rows_emb, sample = _clustered(rng, n_rows, n_topics)
+
+    g = _BenchGraph()
+    g.add([(f"n{i:06d}", rows_emb[i], i % 2) for i in range(n_rows)])
+    q = sample(BATCH)
+
+    qkw = dict(quantized=True, coarse_mult=COARSE_MULT,
+               scan_bits=SCAN_BITS, scan_seed=SCAN_SEED)
+    exact = VectorStore(g)
+    quant = VectorStore(g, **qkw)
+    n_shards = n_shards or max(2, len(jax.devices()))
+    qshard = ShardedVectorStore(g, n_shards=n_shards,
+                                mesh=local_data_mesh(), **qkw)
+
+    rows: List[str] = []
+    report: Dict[str, object] = {
+        "n_rows": n_rows, "n_topics": n_topics, "dim": DIM,
+        "batch": BATCH, "top_k": TOP_K, "scan_bits": SCAN_BITS,
+        "scan_seed": SCAN_SEED, "coarse_mult": COARSE_MULT,
+        "n_shards": n_shards, "recall_floor": RECALL_FLOOR,
+        "qps_asserted": n_rows >= QPS_ASSERT_ROWS,
+    }
+
+    # one-time encode cost of the compressed plane (hash-once-at-append)
+    t0 = time.perf_counter()
+    exact.refresh()
+    t_exact_build = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    quant.refresh()
+    t_quant_build = time.perf_counter() - t0
+    qshard.refresh()
+    rows.append(csv_row(
+        "quantized_scan/build", 1e6 * t_quant_build,
+        f"rows={n_rows};exact_build_s={t_exact_build:.2f};"
+        f"quant_build_s={t_quant_build:.2f};"
+        f"code_words={quant._group.quant.n_words}"))
+
+    # -- static phase: QPS + recall + bytes at the serving point -----------
+    def _phase(tag: str) -> Tuple[float, float]:
+        want = exact.search_batch(q, TOP_K)
+        got = quant.search_batch(q, TOP_K)
+        got_s = qshard.search_batch(q, TOP_K)
+        rec = _recall(want, got)
+        rec_s = _recall(want, got_s)
+        assert rec >= RECALL_FLOOR, (tag, rec)
+        assert rec_s >= RECALL_FLOOR, (tag, rec_s)
+        _assert_score_parity(want, got, tag)
+        _assert_score_parity(want, got_s, tag + "/sharded")
+        _full_coverage_check(exact, quant, q, tag + "/full_coverage")
+        _full_coverage_check(exact, qshard, q,
+                             tag + "/full_coverage_sharded")
+        t_e = _best_time(lambda: exact.search_batch(q, TOP_K))
+        t_q = _best_time(lambda: quant.search_batch(q, TOP_K))
+        union = BATCH * COARSE_MULT * TOP_K
+        b_e = _scan_bytes(exact, False, union)
+        b_q = _scan_bytes(quant, True, union)
+        report[tag] = {
+            "recall": rec, "recall_sharded": rec_s,
+            "exact_qps": BATCH / max(t_e, 1e-9),
+            "quant_qps": BATCH / max(t_q, 1e-9),
+            "speedup": t_e / max(t_q, 1e-9),
+            "exact_bytes": b_e, "quant_bytes_max": b_q,
+            "bytes_ratio": b_e / max(b_q, 1),
+        }
+        rows.append(csv_row(
+            f"quantized_scan/{tag}", 1e6 * t_q / BATCH,
+            f"recall={rec:.3f};speedup={t_e / max(t_q, 1e-9):.2f}x;"
+            f"exact_qps={BATCH / max(t_e, 1e-9):.1f};"
+            f"quant_qps={BATCH / max(t_q, 1e-9):.1f};"
+            f"bytes_ratio={b_e / max(b_q, 1):.1f}x"))
+        return t_e, t_q
+
+    t_e, t_q = _phase("static")
+    if n_rows >= QPS_ASSERT_ROWS:
+        assert t_q < t_e, \
+            f"two-stage ({t_q * 1e3:.2f}ms) not beating exact " \
+            f"({t_e * 1e3:.2f}ms) at recall floor {RECALL_FLOOR}"
+
+    # coarse budget sweep (reported; the floor is asserted at mult=4)
+    sweep = {}
+    want = exact.search_batch(q, TOP_K)
+    for mult in (2, 4, 8):
+        quant.coarse_mult = mult
+        rec = _recall(want, quant.search_batch(q, TOP_K))
+        t_m = _best_time(lambda: quant.search_batch(q, TOP_K))
+        sweep[str(mult)] = {"recall": rec,
+                            "qps": BATCH / max(t_m, 1e-9)}
+    quant.coarse_mult = COARSE_MULT
+    report["mult_sweep"] = sweep
+    rows.append(csv_row(
+        "quantized_scan/mult_sweep", 0.0,
+        ";".join(f"m{m}_recall={v['recall']:.3f}"
+                 for m, v in sweep.items())))
+
+    # -- churn phase: tombstones, compaction, mid-benchmark reshard --------
+    dead = [f"n{i:06d}" for i in range(0, n_rows, 10)]
+    g.remove(dead)
+    got = quant.search_batch(q, TOP_K)
+    assert not any(set(h.node_id for h in b) & set(dead) for b in got), \
+        "tombstoned rows surfaced from the coarse scan"
+    _phase("after_tombstones")
+
+    exact.compact()
+    quant.compact()
+    qshard.compact()
+    _phase("after_compact")
+
+    t0 = time.perf_counter()
+    Resharder().reshard(qshard, max(1, n_shards // 2), flat=False)
+    t_reshard = time.perf_counter() - t0
+    assert qshard.quantized and qshard.n_shards == max(1, n_shards // 2)
+    _phase("after_reshard")
+    report["reshard_s"] = t_reshard
+    rows.append(csv_row(
+        "quantized_scan/reshard", 1e6 * t_reshard,
+        f"n_shards={n_shards}->{max(1, n_shards // 2)};"
+        f"requantized_rows={qshard.size}"))
+
+    ctx = _text_corpus_context(n_docs)
+    report["text_corpus"] = ctx
+    rows.append(csv_row("quantized_scan/text_corpus", 0.0, ctx))
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

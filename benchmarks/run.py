@@ -20,6 +20,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         incremental_quality,
         initial_coverage,
         kernel_bench,
+        quantized_scan,
         query_batch,
         reshard,
         roofline,
@@ -49,6 +50,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # asserted); below ~1000 rows the fixed dispatch overheads
         # drown the replay-vs-restack signal, so keep a 120-doc floor
         "reshard": lambda: reshard.run(n_docs=max(120, half)),
+        # two-stage quantized scan vs the exact oracle: the recall
+        # floor, score parity, and full-coverage bitwise equality are
+        # asserted; the QPS win additionally asserted at signal scale
+        "quantized_scan": lambda: quantized_scan.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -71,6 +76,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # signal (see above), so it keeps its 120-doc corpus in
         # smoke; still seconds-scale, recording BENCH_reshard.json
         suites["reshard"] = lambda: reshard.run(n_docs=120)
+        # recall floor + score parity + full-coverage bitwise still
+        # asserted at smoke scale; the QPS assert self-gates on rows
+        suites["quantized_scan"] = lambda: quantized_scan.run(
+            n_docs=24, rows_per_doc=50)
     return suites
 
 

@@ -266,6 +266,16 @@ class EraRAGConfig:
     reshard_tombstone_threshold: float = 0.0
     reshard_min_rows: int = 256      # ignore toy indexes
     reshard_max_shards: int = 64     # skew-growth ceiling
+    # two-stage quantized retrieval (kernels/quantized_scan): serve
+    # search through a coarse Hamming scan over packed LSH sign-bit
+    # codes, then an exact fp32 rescore of the top C = coarse_mult *
+    # top_k candidates.  False keeps the dense single-stage scan (the
+    # differential oracle).  scan_bits is the code width in bits; the
+    # hyperplane seed is the config's `seed` (persisted with the store
+    # snapshot so restored codes match bitwise).
+    quantized_scan: bool = False
+    coarse_mult: int = 4
+    scan_bits: int = 64
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -283,6 +293,11 @@ class EraRAGConfig:
             raise ValueError("reshard_min_rows must be >= 0")
         if self.reshard_max_shards < 1:
             raise ValueError("reshard_max_shards must be >= 1")
+        if self.coarse_mult < 1:
+            raise ValueError("coarse_mult must be >= 1 (C = "
+                             "coarse_mult * k must cover the top-k)")
+        if self.scan_bits < 1:
+            raise ValueError("scan_bits must be >= 1")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":
         """Tab V ablation: scale tolerance delta around the mean size."""

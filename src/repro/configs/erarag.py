@@ -1,4 +1,25 @@
-"""The paper's own system config (EraRAG hyper-parameters)."""
+"""The paper's own system config (EraRAG hyper-parameters).
+
+Two-stage quantized retrieval (``kernels/quantized_scan``) is wired
+behind three fields, off by default so the exact dense scan stays the
+baseline and the differential oracle:
+
+- ``quantized_scan``: serve every search as a coarse Hamming scan over
+  packed LSH sign-bit codes followed by an exact fp32 rescore of the
+  surviving candidates (scores stay bitwise-equal to the dense scan's
+  for the rows returned; only candidate selection is approximate).
+- ``coarse_mult``: rescore budget — the coarse stage keeps
+  ``C = coarse_mult * top_k`` candidates per query (clamped to the
+  shard capacity; a huge value degrades gracefully into the exact
+  scan, bitwise).  4 holds recall@10 >= 0.95 on the benchmark corpus
+  (``benchmarks/quantized_scan.py`` -> ``BENCH_quantized.json``).
+- ``scan_bits``: code width in bits (64 = two uint32 words per row,
+  ~32x fewer bytes scanned than fp32 rows at ``embed_dim=256``).
+
+The scan hyperplanes derive from the config's ``seed``, which is
+persisted in the store snapshot — a restored index re-quantizes to
+bit-identical codes.
+"""
 from repro.common.config import EraRAGConfig
 
 ERARAG_DEFAULT = EraRAGConfig(
@@ -10,4 +31,21 @@ ERARAG_DEFAULT = EraRAGConfig(
     chunk_tokens=64,
     top_k=8,
     token_budget=2048,
+)
+
+# the quantized-retrieval serving profile: identical hierarchy and
+# retrieval hyper-parameters, search served through the two-stage
+# coarse-code + exact-rescore pipeline
+ERARAG_QUANTIZED = EraRAGConfig(
+    n_hyperplanes=12,
+    s_min=4,
+    s_max=12,
+    max_layers=4,
+    embed_dim=256,
+    chunk_tokens=64,
+    top_k=8,
+    token_budget=2048,
+    quantized_scan=True,
+    coarse_mult=4,
+    scan_bits=64,
 )

@@ -26,17 +26,27 @@ from repro.data.chunker import chunk_corpus
 from repro.data.tokenizer import HashTokenizer
 
 
+def _quant_kw(cfg: EraRAGConfig) -> dict:
+    """Two-stage-scan store kwargs from the config (the hyperplane
+    seed is ``cfg.seed``, persisted with the snapshot)."""
+    return {"quantized": cfg.quantized_scan,
+            "coarse_mult": cfg.coarse_mult,
+            "scan_bits": cfg.scan_bits, "scan_seed": cfg.seed}
+
+
 def make_store(graph, cfg: EraRAGConfig, mesh=None) -> AnyStore:
     """cfg.index_shards: 1 -> single-buffer store (a mesh does not
     override an explicitly unsharded config); >1 -> that many
     hash-routed shards; 0 -> one shard per device / per data-axis
     chip.  ``mesh`` lays the stacked shard buffer over its data axis;
-    ``cfg.collective_query`` selects the single-launch sharded scan."""
+    ``cfg.collective_query`` selects the single-launch sharded scan;
+    ``cfg.quantized_scan`` serves search through the two-stage
+    coarse-code + exact-rescore pipeline."""
     if cfg.index_shards == 1:
-        return VectorStore(graph)
+        return VectorStore(graph, **_quant_kw(cfg))
     return ShardedVectorStore(
         graph, n_shards=cfg.index_shards or None, mesh=mesh,
-        collective=cfg.collective_query)
+        collective=cfg.collective_query, **_quant_kw(cfg))
 
 
 class EraRAG:
@@ -75,7 +85,8 @@ class EraRAG:
         is the store to use afterwards."""
         from repro.lifecycle.reshard import Resharder
         resharder = Resharder(mesh=self.mesh,
-                              collective=self.cfg.collective_query)
+                              collective=self.cfg.collective_query,
+                              **_quant_kw(self.cfg))
         self.store = resharder.reshard(self.store, n_shards)
         self.cfg = dataclasses.replace(self.cfg,
                                        index_shards=int(n_shards))
@@ -172,7 +183,8 @@ class EraRAG:
             obj.store = store_from_state(state["store"], obj.graph,
                                          mesh=mesh,
                                          n_shards=cfg.index_shards,
-                                         collective=cfg.collective_query)
+                                         collective=cfg.collective_query,
+                                         **_quant_kw(cfg))
         else:
             obj.store = make_store(obj.graph, cfg, mesh)
         obj._attach_lifecycle()

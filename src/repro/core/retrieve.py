@@ -61,14 +61,28 @@ class HopRetrieval(Retrieval):
 
 def _budgeted(graph, hits: Sequence[Hit], budget: int,
               tokenizer: HashTokenizer) -> Retrieval:
+    """Greedy score-ordered truncation of the context to ``budget``
+    tokens (paper Alg 2): take hits in score order until the next one
+    no longer fits, then STOP — a later (lower-scored) hit must never
+    leapfrog a skipped higher-scored one.  The top hit is always kept:
+    when it alone exceeds the budget its text is truncated to exactly
+    ``budget`` tokens, so the composed context never blows the budget
+    either."""
     picked: List[Hit] = []
     texts: List[str] = []
     total = 0
     for h in hits:
         node = graph.nodes[h.node_id]
         n = node.n_tokens or tokenizer.count(node.text)
-        if picked and total + n > budget:
-            continue
+        if total + n > budget:
+            if not picked:
+                # an answer needs at least its best hit: truncate the
+                # text to the budget instead of returning nothing
+                picked.append(h)
+                texts.append(" ".join(
+                    tokenizer.tokenize(node.text)[:budget]))
+                total = budget
+            break
         picked.append(h)
         texts.append(node.text)
         total += n

@@ -88,6 +88,46 @@ Invariants (asserted by ``tests/test_store_sharded.py`` and
 - **delta locality**: a delta only touches the slots of the shards
   that own its ids; all other shards stage zero rows.
 
+Two-stage quantized retrieval (``quantized=True``)
+--------------------------------------------------
+The store can maintain a COMPRESSED PLANE next to the fp32 rows: a
+``(S, cap, n_words)`` uint32 stack of packed LSH sign-bit codes
+(``kernels/lsh_hash`` over hyperplanes derived from the persisted
+``scan_seed``), laid out with the same ``NamedSharding`` as the row
+stack.  Queries then run the fused two-stage pipeline of
+``kernels/quantized_scan`` — coarse Hamming top-C over the codes,
+exact fp32 rescore of only the C gathered candidate rows — on every
+dispatch path (flat, per-shard loop, and inside the one collective
+``shard_map`` program), with ``C = coarse_mult * k`` clamped to the
+capacity.  Scores are always REAL inner products (bitwise-equal to
+the dense scan's for the rows returned); only WHICH rows make the
+candidate set is approximate, so the exact path stays available as
+the differential oracle (flip ``store.quantized``) with an asserted
+recall floor (``tests/test_store_quantized.py``).
+
+Compressed-plane invariants (everything the delta machinery must
+preserve, asserted by the differential suite):
+
+- **hash-at-append, once**: rows are encoded inside the same
+  ``write_rows`` that uploads the fp32 block — on the incremental
+  append, AND on ``load_state`` (snapshot restore / reshard replay),
+  which funnels through the identical write.  The codes can never
+  drift from the rows they mirror, and an epoch swap re-quantizes
+  for free.
+- **flag mirroring**: each buffer flag column is mirrored as a
+  penalty word group in the code (all-ones when set): tombstoning
+  flips the dead group IN PLACE (no rehash), and layer filters
+  penalize their group through the query-side code so filtered rows
+  lose the coarse ranking before they are ever gathered.
+- **row alignment under compaction**: the code plane gathers by the
+  SAME ``keep`` index as the fp32 double-buffer gather and commits in
+  the same swap, so row <-> code alignment survives compaction
+  bitwise.
+- **derived, never persisted**: ``state_dict`` stores only the scan
+  hyperparameters (``scan_bits`` / ``scan_seed`` / ``coarse_mult``);
+  restore re-derives the hyperplanes from the seed and re-hashes, so
+  restored codes match the saved store's exactly.
+
 Queries are batched end-to-end: ``search_batch`` serves a ``(B, d)``
 query block in one launch (collective) or one launch per shard
 (fallback); ``search`` is the B=1 special case.  ``stats`` counts
@@ -111,6 +151,8 @@ import numpy as np
 
 from repro.kernels.mips_topk.ops import MASK_BIAS, augment_queries, \
     flagged_mips_topk, merge_sharded_topk, mips_topk, sharded_mips_topk
+from repro.kernels.quantized_scan.ops import QuantSpec, encode_rows, \
+    hyperplanes, quantized_flagged_topk, sharded_quantized_topk
 
 logger = logging.getLogger(__name__)
 
@@ -157,6 +199,9 @@ class StoreStats:
     # lifecycle: epoch-swapped live resharding (see repro.lifecycle)
     reshards: int = 0        # committed epoch swaps
     reshard_steps: int = 0   # staged target shards built by refresh()
+    # two-stage quantized retrieval: search launches served through the
+    # coarse sign-bit scan + exact rescore instead of the dense scan
+    quantized_scans: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +389,67 @@ def _write_seq_fn(sharding):
     return jax.jit(write, **_pin(sharding))
 
 
+# -- compressed code plane (two-stage quantized retrieval) ------------------
+
+_CODE_DEAD = np.uint32(0xFFFFFFFF)   # a set flag's penalty-group word
+
+
+def _dead_coded(codes_slice: jnp.ndarray,
+                spec: QuantSpec) -> jnp.ndarray:
+    """Stamp every row's DEAD penalty group set (padding rows must sort
+    after all live rows in the coarse scan, mirroring the fp32 padding
+    rows' dead flag)."""
+    lo, hi = spec.flag_group(_DEAD)
+    return codes_slice.at[..., lo:hi].set(_CODE_DEAD)
+
+
+@functools.lru_cache(maxsize=None)
+def _grow_codes_fn(sharding, pad_rows: int, spec: QuantSpec):
+    def grow(codes):
+        pad_shape = codes.shape[:-2] + (pad_rows, codes.shape[-1])
+        pad = _dead_coded(jnp.zeros(pad_shape, jnp.uint32), spec)
+        return jnp.concatenate([codes, pad], axis=-2)
+    return jax.jit(grow, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _encode_write_fn(sharding, flat2d: bool, spec: QuantSpec):
+    # rows are hashed ONCE, here, at append (or snapshot replay —
+    # load_state funnels through the same write): the compressed plane
+    # can never drift from the fp32 rows it mirrors
+    def write(codes, block, planes, slot, row0):
+        enc = encode_rows(block[:, :spec.dim], block[:, spec.dim:],
+                          planes, spec)
+        if flat2d:
+            return jax.lax.dynamic_update_slice(codes, enc, (row0, 0))
+        return jax.lax.dynamic_update_slice(codes, enc[None],
+                                            (slot, row0, 0))
+    return jax.jit(write, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _mark_dead_codes_fn(sharding, flat2d: bool, spec: QuantSpec):
+    lo, hi = spec.flag_group(_DEAD)
+
+    def mark(codes, rows, slot):
+        if flat2d:
+            return codes.at[rows, lo:hi].set(_CODE_DEAD)
+        return codes.at[slot, rows, lo:hi].set(_CODE_DEAD)
+    return jax.jit(mark, **_pin(sharding))
+
+
+@functools.lru_cache(maxsize=None)
+def _compact_codes_fn(flat2d: bool, spec: QuantSpec):
+    # codes ride the SAME keep index as the fp32 gather — the two
+    # planes stay row-aligned by construction
+    def compacted(codes, keep, slot):
+        sl = codes if flat2d else codes[slot]
+        out = _dead_coded(jnp.zeros_like(sl), spec)
+        return jax.lax.dynamic_update_slice(
+            out, jnp.take(sl, keep, axis=0), (0, 0))
+    return jax.jit(compacted)
+
+
 class _StackedBuffers:
     """Device side of the store: ONE stacked ``(S, cap, d + N_FLAGS)``
     buffer (plus an optional ``(S, cap)`` int32 global-sequence plane
@@ -362,6 +468,7 @@ class _StackedBuffers:
     def __init__(self, n_slots: int, dim: int, *, sharding=None,
                  seq_sharding=None, min_capacity: int = 64,
                  track_seqs: bool = False,
+                 quant: Optional[QuantSpec] = None,
                  stats: Optional[StoreStats] = None):
         self.n_slots = int(n_slots)
         self.dim = int(dim)
@@ -369,6 +476,11 @@ class _StackedBuffers:
         self.seq_sharding = seq_sharding
         self.min_capacity = int(min_capacity)
         self.track_seqs = bool(track_seqs)
+        self.quant = quant
+        # hyperplanes derive from the persisted (spec.dim, n_bits,
+        # seed) alone — a restored store re-quantizes to the same codes
+        self.planes = None if quant is None \
+            else jnp.asarray(hyperplanes(quant))
         self.stats = stats if stats is not None else StoreStats()
         self._flat2d = self.n_slots == 1 and sharding is None
         self.reset()
@@ -377,7 +489,9 @@ class _StackedBuffers:
         self.capacity = 0
         self.buf = None   # (S, cap, d+F) | (cap, d+F) when _flat2d
         self.seq = None   # (S, cap) int32 when track_seqs
+        self.codes = None  # (S, cap, W) | (cap, W) u32 when quant
         self._views: Dict[int, Tuple[int, jnp.ndarray]] = {}
+        self._code_views: Dict[int, Tuple[int, jnp.ndarray]] = {}
         self._version = 0
 
     def _mutated(self) -> None:
@@ -406,12 +520,23 @@ class _StackedBuffers:
                 self.seq = self._put(
                     np.full(lead + (cap,), _SEQ_PAD, np.int32),
                     self.seq_sharding)
+            if self.quant is not None:
+                codes = np.zeros(lead + (cap, self.quant.n_words),
+                                 np.uint32)
+                lo, hi = self.quant.flag_group(_DEAD)
+                codes[..., lo:hi] = _CODE_DEAD
+                # the codes plane reuses the buf NamedSharding (both
+                # are (S, rows, cols) with the slot dim laid out)
+                self.codes = self._put(codes, self.sharding)
         else:
             pad = cap - self.capacity
             self.buf = _grow_buf_fn(self.sharding, pad, d)(self.buf)
             if self.track_seqs:
                 self.seq = _grow_seq_fn(self.seq_sharding,
                                         pad)(self.seq)
+            if self.quant is not None:
+                self.codes = _grow_codes_fn(self.sharding, pad,
+                                            self.quant)(self.codes)
         self.capacity = cap
         self.stats.growths += 1
         self._mutated()
@@ -423,6 +548,13 @@ class _StackedBuffers:
         if self.track_seqs and seqs is not None:
             self.seq = _write_seq_fn(self.seq_sharding)(
                 self.seq, np.asarray(seqs, np.int32), np.int32(slot),
+                np.int32(row0))
+        if self.quant is not None:
+            # hash-at-append: the block's flag columns (incl. a
+            # snapshot's tombstones) become penalty word groups
+            self.codes = _encode_write_fn(
+                self.sharding, self._flat2d, self.quant)(
+                self.codes, block, self.planes, np.int32(slot),
                 np.int32(row0))
         self._mutated()
 
@@ -436,15 +568,23 @@ class _StackedBuffers:
         self._mutated()
 
     def mark_dead(self, slot: int, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, np.int32)
         self.buf = _mark_dead_fn(self.sharding, self._flat2d,
                                  self.dim)(
-            self.buf, np.asarray(rows, np.int32), np.int32(slot))
+            self.buf, rows, np.int32(slot))
+        if self.quant is not None:
+            # tombstones flip the dead penalty group in place: no
+            # rehash — the code words stay whatever the row hashed to
+            self.codes = _mark_dead_codes_fn(
+                self.sharding, self._flat2d, self.quant)(
+                self.codes, rows, np.int32(slot))
         self._mutated()
 
     def compact_gather(self, slot: int, keep: np.ndarray):
         """Dispatch the order-preserving gather into a DOUBLE BUFFER
         (standalone slice arrays); the stack is untouched until
-        ``commit_compacted`` swaps them in."""
+        ``commit_compacted`` swaps them in.  The codes plane gathers
+        by the SAME keep index, so the two planes stay row-aligned."""
         keep = np.asarray(keep, np.int32)
         buf_slice = _compact_buf_fn(self._flat2d, self.dim)(
             self.buf, keep, np.int32(slot))
@@ -452,15 +592,24 @@ class _StackedBuffers:
         if self.track_seqs:
             seq_slice = _compact_seq_fn()(self.seq, keep,
                                           np.int32(slot))
-        return buf_slice, seq_slice
+        codes_slice = None
+        if self.quant is not None:
+            codes_slice = _compact_codes_fn(self._flat2d, self.quant)(
+                self.codes, keep, np.int32(slot))
+        return buf_slice, seq_slice, codes_slice
 
     def commit_compacted(self, slot: int, compacted) -> None:
-        buf_slice, seq_slice = compacted
+        buf_slice, seq_slice, codes_slice = compacted
         self.buf = _commit_buf_fn(self.sharding, self._flat2d)(
             self.buf, buf_slice, np.int32(slot))
         if self.track_seqs and seq_slice is not None:
             self.seq = _commit_seq_fn(self.seq_sharding)(
                 self.seq, seq_slice, np.int32(slot))
+        if self.quant is not None and codes_slice is not None:
+            # _commit_buf_fn is dtype-agnostic (jit retraces per
+            # dtype), so the uint32 plane commits through the same path
+            self.codes = _commit_buf_fn(self.sharding, self._flat2d)(
+                self.codes, codes_slice, np.int32(slot))
         self._mutated()
 
     def slice_view(self, slot: int) -> jnp.ndarray:
@@ -474,6 +623,18 @@ class _StackedBuffers:
             return cached[1]
         view = self.buf[slot]
         self._views[slot] = (self._version, view)
+        return view
+
+    def codes_view(self, slot: int) -> jnp.ndarray:
+        """Per-slot 2-D code-plane view (quantized fallback scan),
+        memoized per mutation version like ``slice_view``."""
+        if self._flat2d:
+            return self.codes
+        cached = self._code_views.get(slot)
+        if cached is not None and cached[0] == self._version:
+            return cached[1]
+        view = self.codes[slot]
+        self._code_views[slot] = (self._version, view)
         return view
 
     def read_rows(self, slot: int, n: int) -> np.ndarray:
@@ -695,6 +856,23 @@ def pack_export_rows(ids: List[str], layers: List[np.ndarray],
             "layers": np.concatenate(layers)[order],
             "seqs": seq_all[order],
             "rows": np.concatenate(rows)[order]}
+
+
+def _quant_spec(dim: int, quantized: bool, scan_bits: int,
+                scan_seed: int) -> Optional[QuantSpec]:
+    """Code-plane layout for a store constructed quantized (None keeps
+    the default store code-plane-free: zero memory / append overhead)."""
+    if not quantized:
+        return None
+    return QuantSpec(dim=int(dim), n_bits=int(scan_bits),
+                     n_flags=N_FLAGS, seed=int(scan_seed))
+
+
+def _apply_quant_state(state: dict, kw: dict) -> None:
+    """Fold a snapshot's quant entry into constructor kwargs (explicit
+    kwargs win; snapshots predating the entry restore unquantized)."""
+    for key, val in (state.get("quant") or {}).items():
+        kw.setdefault(key, val)
 
 
 def _filter_bias(layer_filter: Optional[str]) -> Tuple[float, ...]:
@@ -983,6 +1161,17 @@ class _BaseStore:
         store's traffic — the cache is per instance)."""
         return self._router.info()
 
+    def _quant_state(self) -> dict:
+        """Persisted two-stage-scan hyperparameters.  The code plane
+        itself is NEVER serialized: restore re-hashes every row through
+        hyperplanes re-derived from the persisted ``scan_seed``, so the
+        snapshot stays O(rows * d) and restored codes match the saved
+        store's bitwise by construction."""
+        return {"quantized": self.quantized,
+                "coarse_mult": self.coarse_mult,
+                "scan_bits": self.scan_bits,
+                "scan_seed": self.scan_seed}
+
     def export_rows(self) -> Dict[str, np.ndarray]:
         """Alive rows in global-sequence order, captured to host: the
         replay source for the lifecycle ``Resharder``.  Returns
@@ -1039,14 +1228,21 @@ class VectorStore(_BaseStore):
     kernel launch — no merge."""
 
     def __init__(self, graph, *, compact_threshold: float = 0.25,
-                 min_capacity: int = 64):
+                 min_capacity: int = 64, quantized: bool = False,
+                 coarse_mult: int = 4, scan_bits: int = 64,
+                 scan_seed: int = 0):
         super().__init__(graph, compact_threshold)
         self.stats = StoreStats()
         self._store_stats = self.stats   # one object, all counters
         dim = graph.cfg.embed_dim
-        self._group = _StackedBuffers(1, dim,
-                                      min_capacity=int(min_capacity),
-                                      stats=self.stats)
+        self.quantized = bool(quantized)
+        self.coarse_mult = int(coarse_mult)
+        self.scan_bits = int(scan_bits)
+        self.scan_seed = int(scan_seed)
+        self._group = _StackedBuffers(
+            1, dim, min_capacity=int(min_capacity),
+            quant=_quant_spec(dim, quantized, scan_bits, scan_seed),
+            stats=self.stats)
         self._s = _Shard(dim, self._group, 0, stats=self.stats)
         self._shards = [self._s]
 
@@ -1057,7 +1253,12 @@ class VectorStore(_BaseStore):
                      layer_filter: Optional[str] = None
                      ) -> List[List[Hit]]:
         """Per-query top-k hits for a (B, d) query batch in ONE kernel
-        launch; row b of the result corresponds to ``queries[b]``."""
+        launch; row b of the result corresponds to ``queries[b]``.
+
+        With ``quantized`` the launch is the fused two-stage pipeline
+        (coarse Hamming over the code plane -> exact fp32 rescore of
+        the top ``coarse_mult * k`` rows); the dense single-stage scan
+        is the oracle and the fallback (flip ``self.quantized``)."""
         self._refresh()
         q = _check_queries(queries)
         if q.shape[0] == 0:
@@ -1066,8 +1267,22 @@ class VectorStore(_BaseStore):
         if n_valid == 0 or k <= 0:
             return [[] for _ in range(q.shape[0])]
         k_eff = min(k, n_valid)
-        vals, idx = flagged_mips_topk(jnp.asarray(q), self._s.buf,
-                                      k_eff, _filter_bias(layer_filter))
+        if self.quantized and self._group.quant is not None:
+            # C = coarse_mult*k clamped to capacity: k <= C <= cap
+            # always holds (k_eff <= n_valid <= rows <= cap), and at
+            # C == cap the candidate set is total — bitwise equality
+            # with the exact scan, no special-cased fallback
+            n_coarse = min(self.coarse_mult * k_eff,
+                           self._group.capacity)
+            vals, idx = quantized_flagged_topk(
+                jnp.asarray(q), self._s.buf, self._group.codes_view(0),
+                k_eff, n_coarse, _filter_bias(layer_filter),
+                self._group.planes, self._group.quant)
+            self._store_stats.quantized_scans += 1
+        else:
+            vals, idx = flagged_mips_topk(
+                jnp.asarray(q), self._s.buf, k_eff,
+                _filter_bias(layer_filter))
         vals = np.asarray(vals)
         idx = np.asarray(idx)
         out: List[List[Hit]] = []
@@ -1094,11 +1309,13 @@ class VectorStore(_BaseStore):
             "kind": "flat",
             "version": self._version,
             "next_seq": self._next_seq,
+            "quant": self._quant_state(),
             "shard": self._s.state_dict(),
         }
 
     @classmethod
     def from_state(cls, state: dict, graph, **kw) -> "VectorStore":
+        _apply_quant_state(state, kw)
         store = cls(graph, **kw)
         store._s.load_state(state["shard"])
         store._next_seq = int(state["next_seq"])
@@ -1128,8 +1345,14 @@ class ShardedVectorStore(_BaseStore):
     def __init__(self, graph, *, n_shards: Optional[int] = None,
                  mesh=None, compact_threshold: float = 0.25,
                  min_capacity: int = 64, rules=None,
-                 collective: bool = True):
+                 collective: bool = True, quantized: bool = False,
+                 coarse_mult: int = 4, scan_bits: int = 64,
+                 scan_seed: int = 0):
         super().__init__(graph, compact_threshold)
+        self.quantized = bool(quantized)
+        self.coarse_mult = int(coarse_mult)
+        self.scan_bits = int(scan_bits)
+        self.scan_seed = int(scan_seed)
         axes: Tuple[str, ...] = ()
         axis_size = 1
         if mesh is not None:
@@ -1177,6 +1400,7 @@ class ShardedVectorStore(_BaseStore):
             n_slots, dim, sharding=sharding, seq_sharding=seq_sharding,
             min_capacity=int(min_capacity),
             track_seqs=self._collective_capable,
+            quant=_quant_spec(dim, quantized, scan_bits, scan_seed),
             stats=self._store_stats)
         self._shards = [_Shard(dim, self._group, s)
                         for s in range(self.n_shards)]
@@ -1249,13 +1473,31 @@ class ShardedVectorStore(_BaseStore):
             return [[] for _ in range(n_q)]
         k_eff = min(k, n_valid)
         bias = _filter_bias(layer_filter)
+        grp = self._group
+        quant = self.quantized and grp.quant is not None
         if self.collective_active:
-            mv, ms = sharded_mips_topk(
-                jnp.asarray(q), self._group.buf, self._group.seq,
-                min(k_eff, self._group.capacity), k_eff, bias,
-                mesh=self.mesh, axis_names=self._axis_names)
+            k_shard = min(k_eff, grp.capacity)
+            if quant:
+                # coarse + gather + rescore fused INSIDE the one
+                # shard_map program; C clamps to the lockstep capacity
+                # (C == cap => per-shard bitwise equality with exact)
+                n_coarse = max(min(self.coarse_mult * k_eff,
+                                   grp.capacity), k_shard)
+                mv, ms = sharded_quantized_topk(
+                    jnp.asarray(q), grp.buf, grp.codes, grp.seq,
+                    grp.planes, k_shard, k_eff, n_coarse, bias,
+                    grp.quant, mesh=self.mesh,
+                    axis_names=self._axis_names)
+                self._store_stats.quantized_scans += 1
+            else:
+                mv, ms = sharded_mips_topk(
+                    jnp.asarray(q), grp.buf, grp.seq, k_shard, k_eff,
+                    bias, mesh=self.mesh, axis_names=self._axis_names)
         else:
-            mv, ms = self._loop_dispatch(q, k_eff, bias)
+            mv, ms = self._loop_dispatch(q, k_eff, bias,
+                                         quantized=quant)
+            if quant:
+                self._store_stats.quantized_scans += 1
         mv = np.asarray(mv)
         ms = np.asarray(ms)
         out: List[List[Hit]] = []
@@ -1270,18 +1512,29 @@ class ShardedVectorStore(_BaseStore):
         return out
 
     def _loop_dispatch(self, q: np.ndarray, k_eff: int,
-                       bias: Tuple[float, ...]):
-        """Per-shard fallback/oracle: one ``mips_topk`` launch per
-        non-empty shard (async dispatch — the scans overlap; the
-        augmented query block is built ONCE for the whole loop), then
-        host-side sentinel padding + ``merge_sharded_topk``."""
-        q_aug = augment_queries(jnp.asarray(q), bias)
+                       bias: Tuple[float, ...],
+                       quantized: bool = False):
+        """Per-shard fallback/oracle: one ``mips_topk`` (or fused
+        ``quantized_flagged_topk``) launch per non-empty shard (async
+        dispatch — the scans overlap; the augmented query block is
+        built ONCE for the whole loop), then host-side sentinel
+        padding + ``merge_sharded_topk``."""
+        grp = self._group
+        q_dev = jnp.asarray(q)
+        q_aug = None if quantized else augment_queries(q_dev, bias)
         pending: List[Tuple[_Shard, int, jnp.ndarray, jnp.ndarray]] = []
         for sh in self._shards:
             if sh.count == 0:
                 continue
             k_s = min(k_eff, sh.capacity)
-            v, i = mips_topk(q_aug, sh.buf, k_s)
+            if quantized:
+                n_c = max(min(self.coarse_mult * k_eff, sh.capacity),
+                          k_s)
+                v, i = quantized_flagged_topk(
+                    q_dev, sh.buf, grp.codes_view(sh.slot), k_s, n_c,
+                    bias, grp.planes, grp.quant)
+            else:
+                v, i = mips_topk(q_aug, sh.buf, k_s)
             pending.append((sh, k_s, v, i))
         val_blocks: List[np.ndarray] = []
         seq_blocks: List[np.ndarray] = []
@@ -1342,6 +1595,7 @@ class ShardedVectorStore(_BaseStore):
             "n_shards": self.n_shards,
             "version": self._version,
             "next_seq": self._next_seq,
+            "quant": self._quant_state(),
             "shards": [sh.state_dict() for sh in self._shards],
         }
 
@@ -1355,6 +1609,7 @@ class ShardedVectorStore(_BaseStore):
         freshly-routed store at the requested count — never loaded
         into a mismatched (ghost) layout, and never a full O(N)
         re-embed."""
+        _apply_quant_state(state, kw)
         snap = int(state["n_shards"])
         want = snap if not n_shards else int(n_shards)
         if want != snap:
@@ -1381,6 +1636,7 @@ def store_from_state(state: dict, graph, *, mesh=None,
     snapshot through the lifecycle ``Resharder`` when it disagrees —
     including across kinds (flat snapshot -> sharded store and back).
     """
+    _apply_quant_state(state, kw)   # replayed stores keep their plane
     want = int(n_shards) if n_shards else None
     if state.get("kind") == "sharded":
         if want is not None and want != int(state["n_shards"]):

@@ -1,4 +1,16 @@
-"""Public Hamming top-k op."""
+"""Public Hamming top-k op.
+
+This is the COARSE stage of the store's two-stage quantized retrieval
+(``kernels/quantized_scan``): queries and rows hash to packed LSH
+sign-bit codes (``kernels/lsh_hash``), this op selects the top-C
+nearest codes per query, and only those C rows are gathered for the
+exact fp32 rescore.  Because the candidate set feeds a differential-
+tested pipeline, the tie-break must be DETERMINISTIC and identical on
+every backend: equal-distance candidates resolve lowest-index-first —
+``lax.top_k`` semantics in the ref, first-occurrence merge in the
+Pallas kernel — pinned by the differential assertions in
+``tests/test_kernels.py``.
+"""
 from __future__ import annotations
 
 import functools

@@ -1,4 +1,14 @@
-"""Public LSH-hash op: pallas on TPU, jnp oracle elsewhere."""
+"""Public LSH-hash op: pallas on TPU, jnp oracle elsewhere.
+
+On the query path this is the encoder for the store's compressed
+plane (``kernels/quantized_scan``): every appended row and every
+incoming query hashes through the same persisted hyperplanes, so the
+coarse Hamming scan compares like with like.  Codes must therefore be
+CANONICAL — identical bit-for-bit on the Pallas and ref branches —
+or the two-stage candidate set (and thus recall) becomes
+platform-dependent.  The tail-bit mask below is the canonicality
+contract: it is applied to BOTH branches, not just the Pallas one.
+"""
 from __future__ import annotations
 
 import functools
@@ -24,7 +34,11 @@ def lsh_hash(v: jnp.ndarray, h: jnp.ndarray, *,
     """Packed hyperplane LSH codes: (n, d), (d, k) -> (n, ceil(k/32)) u32.
 
     Zero-padded hyperplane columns hash to bit 1 (sign(0) >= 0), so the
-    packed tail bits beyond ``k`` are masked to 0 to keep codes canonical.
+    packed tail bits beyond ``k`` are masked to 0 to keep codes
+    canonical.  The mask is applied on every branch — the ref happens
+    to zero-pad its bits already, but relying on that implicitly let
+    the two branches drift; canonicality is enforced here, once, for
+    both.
     """
     k = h.shape[1]
     if use_pallas is None:
@@ -33,11 +47,12 @@ def lsh_hash(v: jnp.ndarray, h: jnp.ndarray, *,
         codes = lsh_hash_pallas(
             v, h,
             interpret=interpret_default() if interpret is None else interpret)
-        n_words = cdiv(k, 32)
-        mask = jnp.full((n_words,), 0xFFFFFFFF, dtype=jnp.uint32)
-        mask = mask.at[-1].set(_tail_mask(k))
-        return codes & mask[None, :]
-    return ref.lsh_hash_ref(v, h)
+    else:
+        codes = ref.lsh_hash_ref(v, h)
+    n_words = cdiv(k, 32)
+    mask = jnp.full((n_words,), 0xFFFFFFFF, dtype=jnp.uint32)
+    mask = mask.at[-1].set(_tail_mask(k))
+    return codes & mask[None, :]
 
 
 def unpack_bits(codes: jnp.ndarray, k: int) -> jnp.ndarray:

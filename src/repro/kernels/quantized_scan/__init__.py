@@ -1,0 +1,7 @@
+from repro.kernels.quantized_scan.ops import (QuantSpec, encode_queries,
+                                              encode_rows, hyperplanes,
+                                              quantized_flagged_topk,
+                                              sharded_quantized_topk)
+
+__all__ = ["QuantSpec", "encode_queries", "encode_rows", "hyperplanes",
+           "quantized_flagged_topk", "sharded_quantized_topk"]

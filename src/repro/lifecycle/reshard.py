@@ -142,6 +142,13 @@ class ShardMigration:
         kw = dict(store_kw)
         kw.setdefault("compact_threshold", src._compact_threshold)
         kw.setdefault("min_capacity", src._group.min_capacity)
+        # the compressed code plane rides the epoch swap: a quantized
+        # source stages a quantized target (load_state re-hashes the
+        # replayed rows — re-quantization is free at install)
+        kw.setdefault("quantized", src.quantized)
+        kw.setdefault("coarse_mult", src.coarse_mult)
+        kw.setdefault("scan_bits", src.scan_bits)
+        kw.setdefault("scan_seed", src.scan_seed)
         if isinstance(src, ShardedVectorStore):
             kw.setdefault("collective", src.collective)
         return ShardedVectorStore(
@@ -311,13 +318,19 @@ class Resharder:
                     version: int, next_seq: int,
                     source: Optional[AnyStore] = None) -> VectorStore:
         kw = {k: v for k, v in self.store_kw.items()
-              if k in ("compact_threshold", "min_capacity")}
+              if k in ("compact_threshold", "min_capacity",
+                       "quantized", "coarse_mult", "scan_bits",
+                       "scan_seed")}
         if source is not None:
             # inherit maintenance tuning from the live source store,
             # exactly like the sharded staging path does
             kw.setdefault("compact_threshold",
                           source._compact_threshold)
             kw.setdefault("min_capacity", source._group.min_capacity)
+            kw.setdefault("quantized", source.quantized)
+            kw.setdefault("coarse_mult", source.coarse_mult)
+            kw.setdefault("scan_bits", source.scan_bits)
+            kw.setdefault("scan_seed", source.scan_seed)
         store = VectorStore(graph, **kw)
         n = len(rows["ids"])
         if n:

@@ -102,6 +102,15 @@ class RAGPipeline:
                       self.rag.stats["retrieval_rounds"],
                   "epoch": store.epoch,
                   "load": ShardLoadReport.from_store(store).to_dict()}
+        # two-stage quantized retrieval: whether searches serve through
+        # the coarse sign-bit scan, and at what candidate multiplier
+        # (the stats dict above carries the `quantized_scans` counter)
+        report["quantized_scan"] = bool(
+            getattr(store, "quantized", False)
+            and store._group.quant is not None)
+        if report["quantized_scan"]:
+            report["coarse_mult"] = store.coarse_mult
+            report["scan_bits"] = store.scan_bits
         if hasattr(store, "shard_report"):
             report["shards"] = store.shard_report()
             # dispatch mode + rotating-compaction state: a dashboard

@@ -18,6 +18,8 @@ from repro.kernels.lsh_hash.ref import lsh_hash_ref
 from repro.kernels.mips_topk.kernel import mips_topk_pallas
 from repro.kernels.mips_topk.ops import merge_sharded_topk
 from repro.kernels.mips_topk.ref import mips_topk_ref
+from repro.kernels.quantized_scan.ops import QuantSpec, encode_rows, \
+    hyperplanes, quantized_flagged_topk
 
 RNG = np.random.default_rng(0)
 
@@ -63,6 +65,33 @@ def test_unpack_bits_roundtrip():
     bits = np.asarray(unpack_bits(codes, 17))
     proj = v @ h
     assert np.array_equal(bits, (proj >= 0).astype(np.int32))
+
+
+@pytest.mark.parametrize("k", [1, 17, 31, 33, 63, 95])
+def test_lsh_hash_tail_bits_canonical(k):
+    """Codes are canonical on BOTH dispatch paths when k % 32 != 0:
+    the bits past k in the last word are zero, so Pallas and reference
+    codes are bitwise-interchangeable as Hamming-scan / store-snapshot
+    inputs (the ref path used to skip the tail mask)."""
+    d = 48
+    v = RNG.standard_normal((65, d)).astype(np.float32)
+    h = RNG.standard_normal((d, k)).astype(np.float32)
+    via_pallas = np.asarray(lsh_hash(jnp.asarray(v), jnp.asarray(h),
+                                     use_pallas=True, interpret=True))
+    via_ref = np.asarray(lsh_hash(jnp.asarray(v), jnp.asarray(h),
+                                  use_pallas=False))
+    assert np.array_equal(via_pallas, via_ref)
+    rem = k % 32
+    if rem:
+        # no stray bits above position k-1 in the tail word
+        assert not np.any(via_pallas[:, -1] >> np.uint32(rem))
+        assert not np.any(via_ref[:, -1] >> np.uint32(rem))
+    # the packed tail unpacks back to the sign pattern on both paths
+    signs = (v @ h >= 0).astype(np.int32)
+    assert np.array_equal(np.asarray(unpack_bits(
+        jnp.asarray(via_ref), k)), signs)
+    assert np.array_equal(np.asarray(unpack_bits(
+        jnp.asarray(via_pallas), k)), signs)
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +163,58 @@ def test_hamming_exact_distance():
     d, i = hamming_topk_ref(jnp.asarray(a), jnp.asarray(db), 3)
     assert np.array_equal(np.asarray(d)[0], [0, 1, 3])
     assert np.array_equal(np.asarray(i)[0], [0, 1, 2])
+
+
+def test_hamming_topk_ties_prefer_lower_index():
+    """Tie-break contract on BOTH dispatch paths: equal Hamming
+    distance resolves to the lowest row index first.  The two-stage
+    quantized scan relies on this for a deterministic candidate set."""
+    # many duplicated codes -> ties everywhere
+    base = RNG.integers(0, 2**32, size=(5, 2), dtype=np.uint32)
+    dbc = base[RNG.integers(0, 5, size=64)]  # 64 rows, 5 distinct codes
+    qc = base[:3]
+    rd, ri = hamming_topk_ref(jnp.asarray(qc), jnp.asarray(dbc), 10)
+    pd, pi = hamming_topk_pallas(jnp.asarray(qc), jnp.asarray(dbc), 10,
+                                 interpret=True)
+    assert np.array_equal(np.asarray(rd), np.asarray(pd))
+    assert np.array_equal(np.asarray(ri), np.asarray(pi))
+    rd, ri = np.asarray(rd), np.asarray(ri)
+    for b in range(rd.shape[0]):
+        for j in range(1, rd.shape[1]):
+            if rd[b, j] == rd[b, j - 1]:      # tie -> index ascends
+                assert ri[b, j] > ri[b, j - 1]
+    # all-identical rows: indices must come back 0..k-1 exactly
+    flat = np.broadcast_to(base[:1], (32, 2)).copy()
+    _, ti = hamming_topk_pallas(jnp.asarray(base[:1]),
+                                jnp.asarray(flat), 6, interpret=True)
+    assert np.array_equal(np.asarray(ti)[0], np.arange(6))
+
+
+# ---------------------------------------------------------------------------
+# quantized two-stage scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,c", [(64, 12), (200, 40), (130, 130)])
+def test_quantized_two_stage_pallas_matches_xla(n, c):
+    """The two coarse implementations — fused hamming_topk kernel vs
+    the sort-free counting-threshold mask — must select the identical
+    per-query candidate set and return bitwise-identical results."""
+    d, b, k = 32, 6, 8
+    spec = QuantSpec(dim=d, n_bits=48, n_flags=2, seed=3)
+    planes = jnp.asarray(hyperplanes(spec))
+    db = RNG.standard_normal((n, d + 2)).astype(np.float32)
+    db[:, d] = (np.arange(n) % 5 == 0)     # some flagged rows
+    db[:, d + 1] = 0.0
+    dbj = jnp.asarray(db)
+    codes = encode_rows(dbj[:, :d], dbj[:, d:], planes, spec)
+    q = jnp.asarray(RNG.standard_normal((b, d)).astype(np.float32))
+    bias = (-3e30, 0.0)
+    vx, ix = quantized_flagged_topk(q, dbj, codes, k, c, bias, planes,
+                                    spec, use_pallas=False)
+    vp, ip = quantized_flagged_topk(q, dbj, codes, k, c, bias, planes,
+                                    spec, use_pallas=True,
+                                    interpret=True)
+    assert np.array_equal(np.asarray(ix), np.asarray(ip))
+    assert np.array_equal(np.asarray(vx), np.asarray(vp))
 
 
 # ---------------------------------------------------------------------------

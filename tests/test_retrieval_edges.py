@@ -10,10 +10,13 @@ import pytest
 
 from repro.common.config import EraRAGConfig
 from repro.core.erarag import EraRAG
-from repro.core.retrieve import (adaptive_search, adaptive_search_batch,
+from repro.core.retrieve import (_budgeted, adaptive_search,
+                                 adaptive_search_batch,
                                  collapsed_search,
                                  collapsed_search_batch)
+from repro.core.store import Hit
 from repro.data.corpus import SyntheticCorpus
+from repro.data.tokenizer import HashTokenizer
 from repro.embed.hashing import HashingEmbedder
 
 CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=10, s_min=3, s_max=9,
@@ -134,3 +137,85 @@ def test_query_batch_empty_graph():
     r = EraRAG(CFG, HashingEmbedder(dim=CFG.embed_dim))
     res = r.query_batch(["nothing indexed yet"])
     assert res[0].hits == [] and res[0].context == ""
+
+
+# ---------------------------------------------------------------------------
+# _budgeted composition: the token budget is a hard ceiling
+# ---------------------------------------------------------------------------
+
+class _BudgetNode:
+    def __init__(self, text):
+        self.text = text
+        self.n_tokens = 0   # force the tokenizer.count path
+
+
+class _BudgetGraph:
+    """Minimal graph protocol for driving _budgeted directly."""
+
+    def __init__(self, texts):
+        self.nodes = {f"n{i}": _BudgetNode(t)
+                      for i, t in enumerate(texts)}
+
+
+def _ranked_hits(n):
+    return [Hit(node_id=f"n{i}", score=float(-i), layer=0)
+            for i in range(n)]
+
+
+def test_budgeted_truncates_oversized_first_hit():
+    """A top hit bigger than the whole budget is truncated to exactly
+    the budget, not included whole (the old path blew the ceiling)."""
+    g = _BudgetGraph(["a b c d e f g h", "x y"])
+    tok = HashTokenizer()
+    res = _budgeted(g, _ranked_hits(2), 3, tok)
+    assert [h.node_id for h in res.hits] == ["n0"]
+    assert res.n_tokens == 3
+    assert res.context == "a b c"
+    assert tok.count(res.context) == 3
+
+
+def test_budgeted_never_leapfrogs():
+    """Once a hit does not fit, composition STOPS: a lower-scored
+    later hit must never slip in past a skipped higher-scored one
+    (the old `continue` let n2 leapfrog n1)."""
+    g = _BudgetGraph(["a a a a a", "b b b b b b", "c c"])
+    res = _budgeted(g, _ranked_hits(3), 9, HashTokenizer())
+    assert [h.node_id for h in res.hits] == ["n0"]
+    assert res.n_tokens == 5
+
+
+def test_budget_is_hard_ceiling_across_modes(rag):
+    r, corpus = rag
+    q = _q(r, corpus.qa[1].question)
+    tok = r.tokenizer
+    for budget in (1, 7, 40):
+        res = collapsed_search(r.graph, r.store, q, 6, budget, tok)
+        assert res.hits
+        assert res.n_tokens <= budget
+        assert tok.count(res.context) <= budget
+        for mode in ("detailed", "summarized"):
+            res = adaptive_search(r.graph, r.store, q, 6, budget, 0.5,
+                                  mode, tok)
+            assert res.n_tokens <= budget
+            assert tok.count(res.context) <= budget
+
+
+def test_budgeted_picks_are_a_prefix_across_modes(rag):
+    """Deterministic truncation: the budgeted hits are always a PREFIX
+    of the unbudgeted score-ordered ranking, in every mode."""
+    r, corpus = rag
+    q = _q(r, corpus.qa[2].question)
+    tok = r.tokenizer
+
+    def check(full, small):
+        ids_full = [h.node_id for h in full.hits]
+        ids_small = [h.node_id for h in small.hits]
+        assert ids_small == ids_full[:len(ids_small)]
+
+    check(collapsed_search(r.graph, r.store, q, 6, 10**6, tok),
+          collapsed_search(r.graph, r.store, q, 6, 60, tok))
+    for mode in ("detailed", "summarized"):
+        check(adaptive_search(r.graph, r.store, q, 6, 10**6, 0.5,
+                              mode, tok),
+              adaptive_search(r.graph, r.store, q, 6, 60, 0.5, mode,
+                              tok))
