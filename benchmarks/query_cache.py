@@ -1,0 +1,181 @@
+"""Serving-cache replay: semantic query cache + KV prefix reuse.
+
+A Zipf-skewed question replay (RAG traffic is repeat-heavy) served by
+two end-to-end pipelines with weight-identical LM readers: one with
+the semantic query cache and the engine KV prefix cache enabled, one
+cold.  Three phases:
+
+- **parity replay**: the replay runs through BOTH pipelines with a
+  mid-replay document insert and a mid-replay reshard applied to both
+  indexes — answers and contexts must match bitwise on every block,
+  which proves the caches are invalidated exactly (a stale cached
+  retrieval or KV prefix would fork the cached pipeline's answers).
+- **throughput**: the same replay timed on each pipeline (cache warm);
+  the cached path skips the store sweep on every repeated question and
+  re-prefills only the question suffix, so QPS must clear
+  ``min_speedup``.
+- **hit-rate sweep**: retrieval-only replays across Zipf exponents
+  record how cache effectiveness scales with traffic skew; the
+  baseline exponent must clear ``min_hit``.
+
+Results go to ``BENCH_query_cache.json``.  On CPU CI absolute QPS is
+toy-scale; parity, invalidation counts, hit rates and the relative
+speedup are the tracked signals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, bench_corpus, csv_row, \
+    make_embedder
+from repro.core.erarag import EraRAG
+from repro.core.query_cache import QueryCacheStats
+from repro.serving.rag_pipeline import RAGPipeline
+from repro.serving.testing import make_test_engine as _engine
+
+_NEW_DOC = ("qc_new", "The capital of Flooglestan is Quuxville . "
+                      "The river of Flooglestan is Blorp .")
+
+
+def _configs(token_budget: int):
+    """Cached/cold config twins.  The token budget is sized so the
+    composed context prefix dominates the reader prompt (prefix reuse
+    has flops to save) while still fitting the engine's sequence
+    budget (prefix + question suffix + decode)."""
+    cached = dataclasses.replace(
+        BENCH_CFG, token_budget=token_budget, chunk_tokens=48,
+        query_cache=True, query_cache_size=256)
+    return cached, dataclasses.replace(cached, query_cache=False)
+
+
+def _best_time(fn, repeats: int = 2) -> float:
+    fn()  # warm up (jit compiles + caches)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _zipf_blocks(rng, n: int, pool: int, a: float,
+                 batch: int) -> List[List[int]]:
+    idx = [(int(z) - 1) % pool for z in rng.zipf(a, size=n)]
+    return [idx[i:i + batch] for i in range(0, n, batch)]
+
+
+def _build(cfg, corpus):
+    rag = EraRAG(cfg, make_embedder(cfg))
+    rag.insert_docs(corpus.docs)
+    rag.store.refresh()
+    return rag
+
+
+def run(n_docs: int = 40, replay: int = 48, pool: int = 12,
+        batch: int = 4, zipf_a: float = 1.1,
+        zipf_sweep: tuple = (1.05, 1.3, 1.6),
+        min_hit: float = 0.4, min_speedup: float = 1.5,
+        token_budget: int = 384, seq_len: int = 512,
+        d_model: int = 128, decode_tokens: int = 2,
+        out_json: str | None = "BENCH_query_cache.json") -> List[str]:
+    report: dict = {}
+    rows: List[str] = []
+    cfg_cached, cfg_cold = _configs(token_budget)
+    corpus = bench_corpus(n_docs=n_docs)
+    questions = [qa.question for qa in corpus.qa][:pool]
+    pool = len(questions)
+    rng = np.random.default_rng(0)
+    blocks = _zipf_blocks(rng, replay, pool, zipf_a, batch)
+
+    # ---- phase 1: parity replay with mid-replay insert + reshard ----
+    rag_c = _build(cfg_cached, corpus)
+    rag_u = _build(cfg_cold, corpus)
+    eng_kw = dict(max_batch=batch, max_seq_len=seq_len,
+                  max_new_tokens=decode_tokens, d_model=d_model)
+    pipe_c = RAGPipeline(rag_c, engine=_engine(
+        prefix_cache_entries=32, **eng_kw))
+    pipe_u = RAGPipeline(rag_u, engine=_engine(**eng_kw))
+    b_insert, b_reshard = len(blocks) // 3, (2 * len(blocks)) // 3
+    mismatches = 0
+    for bi, blk in enumerate(blocks):
+        if bi == b_insert:
+            rag_c.insert_docs([_NEW_DOC])
+            rag_u.insert_docs([_NEW_DOC])
+        if bi == b_reshard:
+            rag_c.reshard(2)
+            rag_u.reshard(2)
+        qs = [questions[i] for i in blk]
+        got = pipe_c.answer_batch(qs)
+        want = pipe_u.answer_batch(qs)
+        mismatches += sum(a.answer != b.answer or a.context != b.context
+                          for a, b in zip(got, want))
+    qstats = rag_c.query_cache.stats
+    assert mismatches == 0, \
+        f"cached pipeline diverged on {mismatches} answers"
+    assert qstats.invalidations >= 1, qstats
+    report["replay"] = {
+        "replay": replay, "pool": pool, "zipf_a": zipf_a,
+        "mismatches": mismatches, "insert_block": b_insert,
+        "reshard_block": b_reshard, "hit_rate": qstats.hit_rate,
+        "invalidations": qstats.invalidations,
+        "prefix_hits": pipe_c.engine.stats["prefix_hits"],
+        "prefix_tokens_saved":
+            pipe_c.engine.stats["prefix_tokens_saved"]}
+    rows.append(csv_row(
+        "query_cache/replay_parity", 0.0,
+        f"mismatches={mismatches}_of_{replay};"
+        f"invalidations={qstats.invalidations};"
+        f"hit_rate={qstats.hit_rate:.2f}"))
+
+    # ---- phase 2: throughput, cache warm, no further mutations ----
+    def _replay(pipe):
+        for blk in blocks:
+            pipe.answer_batch([questions[i] for i in blk])
+
+    t_c = _best_time(lambda: _replay(pipe_c))
+    t_u = _best_time(lambda: _replay(pipe_u))
+    speedup = t_u / max(t_c, 1e-9)
+    qps_c, qps_u = replay / max(t_c, 1e-9), replay / max(t_u, 1e-9)
+    assert speedup >= min_speedup, \
+        f"cached replay speedup {speedup:.2f}x < {min_speedup}x"
+    report["throughput"] = {
+        "cached_qps": qps_c, "uncached_qps": qps_u,
+        "speedup": speedup, "min_speedup": min_speedup,
+        "prefix_hits": pipe_c.engine.stats["prefix_hits"],
+        "prefix_tokens_saved":
+            pipe_c.engine.stats["prefix_tokens_saved"]}
+    rows.append(csv_row(
+        f"query_cache/replay_b{batch}", 1e6 * t_c / replay,
+        f"cached_qps={qps_c:.1f};uncached_qps={qps_u:.1f};"
+        f"speedup={speedup:.2f}x;"
+        f"prefix_hits={pipe_c.engine.stats['prefix_hits']}"))
+
+    # ---- phase 3: retrieval-only hit-rate sweep over traffic skew ----
+    report["sweep"] = {}
+    for a in (zipf_a,) + tuple(zipf_sweep):
+        rag_c.query_cache.clear()
+        rag_c.query_cache.stats = QueryCacheStats()
+        for blk in _zipf_blocks(np.random.default_rng(1), replay,
+                                pool, a, batch):
+            rag_c.query_batch([questions[i] for i in blk])
+        rate = rag_c.query_cache.stats.hit_rate
+        report["sweep"][f"{a:g}"] = rate
+        rows.append(csv_row(f"query_cache/hitrate_a{a:g}", 0.0,
+                            f"hit_rate={rate:.2f};replay={replay}"))
+    assert report["sweep"][f"{zipf_a:g}"] >= min_hit, report["sweep"]
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

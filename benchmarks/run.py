@@ -22,6 +22,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         kernel_bench,
         quantized_scan,
         query_batch,
+        query_cache,
         reshard,
         roofline,
         segment_size,
@@ -54,6 +55,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # floor, score parity, and full-coverage bitwise equality are
         # asserted; the QPS win additionally asserted at signal scale
         "quantized_scan": lambda: quantized_scan.run(n_docs=half),
+        # cached vs cold pipeline replay: bitwise answer parity across
+        # a mid-replay insert + reshard, hit-rate floor, and cached-QPS
+        # speedup are all asserted (AssertionError -> nonzero exit)
+        "query_cache": lambda: query_cache.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -80,6 +85,12 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # asserted at smoke scale; the QPS assert self-gates on rows
         suites["quantized_scan"] = lambda: quantized_scan.run(
             n_docs=24, rows_per_doc=50)
+        # parity + invalidation + hit-rate floors hold at smoke scale;
+        # the prefill-flops asymmetry shrinks with the reader shape, so
+        # the speedup floor relaxes (measured ~1.2x at this scale)
+        suites["query_cache"] = lambda: query_cache.run(
+            n_docs=24, replay=24, token_budget=192, seq_len=256,
+            min_hit=0.3, min_speedup=1.1)
     return suites
 
 

@@ -276,6 +276,17 @@ class EraRAGConfig:
     quantized_scan: bool = False
     coarse_mult: int = 4
     scan_bits: int = 64
+    # semantic query cache (core/query_cache.py): serve repeated /
+    # near-duplicate queries from an LRU in front of retrieval, keyed
+    # by the retrieval parameters and invalidated EXACTLY by the store
+    # cache_token (epoch + graph version) — no TTL, provably never
+    # stale.  Off by default: the uncached path is the behavioral
+    # baseline.  threshold is the cosine floor for a semantic (non-
+    # identical-query) hit; 1.0 keeps only the exact-match fast path.
+    # Persisted with the snapshot via the config dict in state_dict().
+    query_cache: bool = False
+    query_cache_size: int = 1024
+    query_cache_threshold: float = 1.0
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -298,6 +309,11 @@ class EraRAGConfig:
                              "coarse_mult * k must cover the top-k)")
         if self.scan_bits < 1:
             raise ValueError("scan_bits must be >= 1")
+        if self.query_cache_size < 1:
+            raise ValueError("query_cache_size must be >= 1")
+        if not (0.0 < self.query_cache_threshold <= 1.0):
+            raise ValueError("query_cache_threshold must be in (0, 1] "
+                             "(1.0 = exact-match hits only)")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":
         """Tab V ablation: scale tolerance delta around the mean size."""

@@ -19,6 +19,29 @@ baseline and the differential oracle:
 The scan hyperplanes derive from the config's ``seed``, which is
 persisted in the store snapshot — a restored index re-quantizes to
 bit-identical codes.
+
+Serving-path caching is wired behind three more fields, also off by
+default (the uncached pipeline is the behavioral baseline — disabled
+config reproduces it bitwise):
+
+- ``query_cache``: put a ``SemanticQueryCache`` in front of retrieval.
+  Repeated queries hit an exact (embedding-digest) fast path; with
+  ``query_cache_threshold < 1.0`` near-duplicate phrasings also hit by
+  cosine similarity.  Invalidation is exact — entries live under the
+  store ``cache_token`` (epoch + graph version), so any committed
+  insert/delete/reshard drops the generation and a stale retrieval is
+  never served.  No TTL.
+- ``query_cache_size``: LRU entry capacity.
+- ``query_cache_threshold``: cosine floor for a semantic hit in
+  (0, 1]; 1.0 keeps only exact-match hits (every returned context is
+  then bitwise identical to the uncached pipeline's), lower values
+  trade retrieval fidelity on near-duplicates for hit rate.
+
+The KV *prefix* cache (N questions over one retrieved context pay one
+context prefill) is an engine-side knob: ``EngineConfig.
+prefix_cache_entries`` in ``repro/serving/engine.py``, default 0 (off).
+``benchmarks/query_cache.py`` -> ``BENCH_query_cache.json`` measures
+both levers on a Zipf-skewed replay and proves invalidation parity.
 """
 from repro.common.config import EraRAGConfig
 

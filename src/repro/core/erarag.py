@@ -63,7 +63,18 @@ class EraRAG:
         # batched-retrieval-round counter: every batched store sweep
         # (however many questions it serves) counts ONE round, so the
         # serving suite can assert a multihop block costs exactly two
+        # (cache-served queries never consume a round — that is the
+        # point of the cache)
         self.stats = {"retrieval_rounds": 0}
+        # semantic query cache in front of retrieval: exact +
+        # cosine-threshold hits, invalidated by the store cache_token
+        # (epoch + graph version), so cached Retrievals are never stale
+        self.query_cache = None
+        if cfg.query_cache:
+            from repro.core.query_cache import SemanticQueryCache
+            self.query_cache = SemanticQueryCache(
+                capacity=cfg.query_cache_size,
+                threshold=cfg.query_cache_threshold)
 
     def _attach_lifecycle(self) -> None:
         """Attach the config's reshard policy (if any thresholds are
@@ -91,6 +102,13 @@ class EraRAG:
         self.cfg = dataclasses.replace(self.cfg,
                                        index_shards=int(n_shards))
         self._attach_lifecycle()
+        if self.query_cache is not None:
+            # a flat<->sharded reshard may swap in a NEW store object
+            # whose epoch counter restarts — the token would collide
+            # with the old store's, so drop the generation explicitly
+            # (in-place sharded migrations are covered by the epoch
+            # bump alone)
+            self.query_cache.clear()
         return self.store
 
     # ------------------------------------------------------------------
@@ -137,7 +155,27 @@ class EraRAG:
                 1 + int(any(r.hops == 2 for r in rets))
             return rets
         q = np.asarray(self.embedder.encode(texts))
-        self.stats["retrieval_rounds"] += 1
+        if self.query_cache is None:
+            self.stats["retrieval_rounds"] += 1
+            return self._search(q, k, mode)
+        # semantic cache front: per-query exact/cosine lookup under the
+        # current store token; only the misses form a (single) store
+        # sweep, and every fresh result is cached under the same token
+        token = self.store.cache_token
+        key = (k, mode, self.cfg.token_budget,
+               self.cfg.retrieval_bias_p)
+        out = self.query_cache.lookup_batch(token, key, q)
+        miss = [i for i, r in enumerate(out) if r is None]
+        if miss:
+            self.stats["retrieval_rounds"] += 1
+            fresh = self._search(q[np.asarray(miss)], k, mode)
+            for i, r in zip(miss, fresh):
+                self.query_cache.put(token, key, q[i], r)
+                out[i] = r
+        return out
+
+    def _search(self, q: np.ndarray, k: int, mode: str
+                ) -> List[Retrieval]:
         if mode == "collapsed":
             return collapsed_search_batch(self.graph, self.store, q, k,
                                           self.cfg.token_budget,

@@ -137,7 +137,11 @@ def adaptive_search_batch(graph, store: AnyStore, query_embs,
     out: List[Retrieval] = []
     for prim, rest in zip(prim_b, rest_b):
         hits = prim + rest
-        hits.sort(key=lambda h: -h.score)
+        # score ties between the two layer scans break on insertion
+        # seq (the kernel-side lowest-index rule): without it the
+        # budgeted context would depend on which layer was scanned
+        # first, making adaptive search order-sensitive
+        hits.sort(key=lambda h: (-h.score, h.seq))
         out.append(_budgeted(graph, hits, token_budget, tok))
     for r in out:
         r.epoch = store.epoch

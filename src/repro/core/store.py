@@ -176,6 +176,11 @@ class Hit:
     node_id: str
     score: float
     layer: int
+    # global insertion-order sequence of the row that scored this hit:
+    # the deterministic tie-break (matching the kernel-side
+    # lowest-index merge) when callers combine hits from separate
+    # scans whose scores collide
+    seq: int = -1
 
 
 @dataclass
@@ -1141,6 +1146,24 @@ class _BaseStore:
         (swapped in at the next refresh), or None."""
         return self._pending[0] if self._pending is not None else None
 
+    @property
+    def cache_token(self) -> Tuple[int, int]:
+        """Exact invalidation token for result caches layered above the
+        store: ``(epoch, graph version)``.
+
+        Search results are a pure function of this token (for a fixed
+        store configuration): the graph version covers every committed
+        insert/delete a query-path ``_refresh`` will replay — including
+        the flat store, which never bumps ``epoch`` — and the epoch
+        covers committed reshard migrations (``install_epoch``).
+        Queries issued mid-migration serve the OLD epoch and leave the
+        token unchanged, so cached entries stay valid (and correct)
+        until the atomic swap.  Staged compactions are bitwise
+        result-transparent and need no token movement.  A TTL-free
+        cache that compares this token can therefore never serve a
+        stale retrieval."""
+        return (self.epoch, self._graph.version)
+
     # ------------------------------------------------------------------
     # lifecycle (see repro.lifecycle: load reports, live resharding)
     # ------------------------------------------------------------------
@@ -1289,7 +1312,8 @@ class VectorStore(_BaseStore):
         for b in range(q.shape[0]):
             out.append([
                 Hit(node_id=self._s.row_ids[int(r)], score=float(v),
-                    layer=int(self._s.row_layers[int(r)]))
+                    layer=int(self._s.row_layers[int(r)]),
+                    seq=int(self._s.row_seq[int(r)]))
                 for v, r in zip(vals[b], idx[b])])
         self.query_hits[0] += sum(len(hits) for hits in out)
         return out
@@ -1507,7 +1531,7 @@ class ShardedVectorStore(_BaseStore):
                 nid, layer, shard = self._seq_map[int(s)]
                 self.query_hits[shard] += 1
                 hits.append(Hit(node_id=nid, score=float(v),
-                                layer=layer))
+                                layer=layer, seq=int(s)))
             out.append(hits)
         return out
 

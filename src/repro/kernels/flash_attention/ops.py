@@ -91,6 +91,80 @@ def causal_blocked_attention(q, k, v, *, scale: float | None = None,
     return jnp.concatenate(outs, axis=2)
 
 
+def extend_attention(q, k, v, *, offsets: jnp.ndarray,
+                     scale: float | None = None,
+                     block_k: int = 1024) -> jnp.ndarray:
+    """Chunked-prefill attention: suffix queries over a per-row-offset
+    cache (the KV-prefix-reuse path).
+
+    q: (b, hq, lq, d) — the suffix tokens' queries, row ``b``'s query
+    ``i`` sitting at global position ``offsets[b] + i``; k, v:
+    (b, hkv, lk, d) — the *full* KV cache, rows ``[: offsets[b]]``
+    holding the reused prefix and ``[offsets[b] : offsets[b]+lq]`` the
+    just-written suffix.  The mask is per-row causal over global
+    positions (key ``j`` visible to query ``i`` iff
+    ``j <= offsets[b] + i``), so unwritten/stale cache rows beyond the
+    row's frontier are never observed.
+
+    The online-softmax block math mirrors ``chunked_attention``
+    term-for-term (operands in the input dtype, fp32 accumulation,
+    masked keys scoring exactly ``_NEG`` -> ``p == 0.0``), so with both
+    paths in a single KV block (``lk <= block_k``) the hit path's
+    outputs are bitwise those of a cold full-prompt prefill.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    bk = min(block_k, lk)
+    pad = (-lk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_blocks = (lk + pad) // bk
+
+    cdt = q.dtype
+    qg = (q * jnp.asarray(scale, cdt)).reshape(b, hkv, group, lq, d)
+    kb = jnp.moveaxis(k.reshape(b, hkv, n_blocks, bk, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, n_blocks, bk, d), 2, 0)
+
+    # per-row global query positions: (b, lq)
+    qpos = offsets.astype(jnp.int32)[:, None] + jnp.arange(lq)[None, :]
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kt, vt, i = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kt.astype(cdt),
+                       preferred_element_type=jnp.float32)
+        kpos = i * bk + jnp.arange(bk)
+        mask = (kpos < lk)[None, None, :] & \
+            (kpos[None, None, :] <= qpos[:, :, None])       # (b, lq, bk)
+        s = jnp.where(mask[:, None, None], s, _NEG)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(cdt), vt.astype(cdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    import os
+    unroll = True if os.environ.get("REPRO_UNROLL_SCANS") else 1
+    m0 = jnp.full((b, hkv, group, lq), _NEG, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, lq), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, hkv, group, lq, d), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kb, vb, jnp.arange(n_blocks)), unroll=unroll)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, hq, lq, d)
+    return out.astype(q.dtype)
+
+
 def chunked_attention(q, k, v, *, causal: bool = False,
                       scale: float | None = None,
                       block_k: int = 1024,

@@ -15,7 +15,8 @@ import numpy as np
 
 from repro.common.config import LMConfig, MoEConfig
 from repro.kernels.flash_attention.ops import causal_blocked_attention, \
-    chunked_attention, dense_decode_attention, flash_attention
+    chunked_attention, dense_decode_attention, extend_attention, \
+    flash_attention
 from repro.kernels.common import on_tpu
 from repro.models.sharding_ctx import shard
 
@@ -126,7 +127,31 @@ def attention_fwd(p: Params, x: jnp.ndarray, cfg: LMConfig,
     k = apply_rope(k, cos, sin)
 
     new_cache = None
-    if kv_cache is not None:
+    if kv_cache is not None and cache_len is not None \
+            and jnp.ndim(cache_len) >= 1:
+        # per-row cache offsets (the KV-prefix-reuse "extend" path):
+        # row b's current K/V lands at [cache_len[b], cache_len[b]+l)
+        # and its queries attend the cache causally over GLOBAL
+        # positions, so the reused prefix rows [: cache_len[b]] are in
+        # scope — unlike the scalar prefill branch below, which starts
+        # from an empty cache and attends the current sequence only
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        row_update = jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(
+                c, u, s, axis=1))
+        ck = row_update(ck, k.astype(ck.dtype), cache_len)
+        cv = row_update(cv, v.astype(cv.dtype), cache_len)
+        new_cache = {"k": ck, "v": cv}
+        ck = shard(ck, ("batch", "kv_heads", "kv_seq", None))
+        cv = shard(cv, ("batch", "kv_heads", "kv_seq", None))
+        if l > 1:
+            out = extend_attention(q, ck, cv, offsets=cache_len,
+                                   block_k=block_k)
+        else:
+            out = dense_decode_attention(
+                q, ck, cv,
+                kv_len=(cache_len + l).astype(jnp.int32))
+    elif kv_cache is not None:
         # cache layout: (b, hkv, max_len, hd); kv seq dim shardable
         ck, cv = kv_cache["k"], kv_cache["v"]
         start = cache_len if cache_len is not None else 0

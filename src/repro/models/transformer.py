@@ -278,6 +278,42 @@ def prefill_padded(params: Params, tokens: jnp.ndarray,
     return logits[:, 0], new_caches
 
 
+def prefill_extend(params: Params, tokens: jnp.ndarray,
+                   lengths: jnp.ndarray, offsets: jnp.ndarray,
+                   caches, cfg: LMConfig, *,
+                   compute_dtype=jnp.bfloat16):
+    """Suffix prefill over per-row prefilled cache prefixes (the KV
+    prefix-reuse admission path).
+
+    ``tokens``: (b, l) suffix tokens right-padded to a shared bucket
+    length; ``lengths``: (b,) true suffix lengths; ``offsets``: (b,)
+    per-row cache prefix lengths (rows ``[: offsets[b]]`` of row b's
+    cache already hold a reused prefix's K/V).  Row b's suffix token
+    ``i`` runs at global position ``offsets[b] + i`` — RoPE angles,
+    cache writes and the causal mask all use global positions, so the
+    suffix K/V rows and the returned logits (taken at the last real
+    suffix position) are bitwise those of a cold full-prompt
+    ``prefill_padded`` whose first ``offsets[b]`` tokens produced the
+    cached prefix.  Rows with ``lengths[b] == 0`` compute garbage the
+    caller discards (engine merges caches row-wise).
+
+    Returns (per-row next-token logits (b, vocab), kv caches).
+    """
+    b, l = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    x = shard(x, ("batch", "seq", "embed"))
+    positions = offsets.astype(jnp.int32)[:, None] + \
+        jnp.arange(l)[None, :]                               # (b, l)
+    x, _, new_caches = _backbone(params, x, cfg, positions, remat=True,
+                                 kv_caches=caches,
+                                 cache_len=offsets.astype(jnp.int32))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.clip(lengths.astype(jnp.int32) - 1, 0, l - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (b, 1, d)
+    logits = _logits(params, x, cfg)
+    return logits[:, 0], new_caches
+
+
 def decode_step(params: Params, tokens: jnp.ndarray, caches,
                 cache_len: jnp.ndarray, cfg: LMConfig, *,
                 compute_dtype=jnp.bfloat16):

@@ -1,4 +1,5 @@
-"""Batched LM serving engine (continuous-batching lite).
+"""Batched LM serving engine (continuous-batching lite + KV prefix
+reuse).
 
 Requests queue up; the engine admits them into fixed decode slots with
 *bucketed prefill*: each admission wave drains the queue into the free
@@ -20,6 +21,25 @@ whole-slot granularity.  Over-long prompts are truncated
 deterministically to ``max_seq_len - budget - 1`` tokens at admission,
 so a mis-sized request can never spill into a neighbor slot's cache.
 
+**KV prefix reuse** (``EngineConfig.prefix_cache_entries > 0``):
+callers may declare a reusable leading block of the prompt — the RAG
+pipeline passes the composed retrieval context, so N questions over
+one retrieved context pay its prefill once.  Admission hashes the
+prefix's token ids; on a hit the cached prefix K/V rows are copied
+into the slot's cache, only the *suffix* (question + answer cue) runs
+through a ``prefill_extend`` launch (global RoPE positions, per-row
+cache offsets), and the slot decodes from the full combined length.
+The hit path's suffix K/V and logits are bitwise those of a cold
+full-prompt prefill (see ``models.transformer.prefill_extend``), so
+answers are unchanged — only the prefill cost shrinks, measured by
+``stats['prefix_hits']`` / ``stats['prefix_tokens_saved']``.  On a
+miss the prefix slice of the freshly prefilled cache is captured into
+an LRU keyed by the prefix token hash.  A prefix is only reused when
+its token ids survive truncation intact and the suffix bucket still
+fits (``plen + bucket(suffix) <= max_seq_len``); otherwise the request
+silently takes the cold path.  Disabled (the default) the engine is
+bitwise the pre-cache engine.
+
 This is the LLM backend for EraRAG's summarizer (LMSummarizer), for
 the QA reader in examples/rag_serve.py, and for
 ``RAGPipeline.answer_batch``'s shared-launch reader and multihop
@@ -27,16 +47,18 @@ bridge-extraction paths.
 """
 from __future__ import annotations
 
+import hashlib
 import queue
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import LMConfig
-from repro.data.tokenizer import EOS_ID, HashTokenizer
+from repro.data.tokenizer import BOS_ID, EOS_ID, HashTokenizer
 from repro.models import transformer as T
 
 
@@ -46,6 +68,10 @@ class EngineConfig:
     max_seq_len: int = 512
     max_new_tokens: int = 64
     compute_dtype: Any = jnp.float32
+    # KV prefix cache capacity (reusable prompt-prefix K/V blocks held
+    # across requests); 0 disables reuse — the default path is bitwise
+    # the pre-cache engine
+    prefix_cache_entries: int = 0
 
 
 @dataclass
@@ -79,9 +105,15 @@ class Engine:
         # admissions make launches < prompts); generate_batches counts
         # ``generate_batch`` calls — the serving pipeline asserts its
         # multihop path costs exactly two per question block
+        # prefix_hits / prefix_tokens_saved: admissions served from the
+        # KV prefix cache and the prompt tokens they did NOT re-prefill
         self.stats = {"decode_launches": 0, "slot_steps": 0,
                       "prefill_launches": 0, "prefill_prompts": 0,
-                      "generate_batches": 0}
+                      "generate_batches": 0, "prefix_hits": 0,
+                      "prefix_tokens_saved": 0}
+        # prefix token-hash -> (per-layer K/V slice pytree, plen), LRU
+        self._prefix_cache: "OrderedDict[bytes, Tuple[Any, int]]" = \
+            OrderedDict()
 
         def _decode(params, tokens, caches, lengths):
             """Per-slot decode: each slot has its own cache length."""
@@ -106,32 +138,63 @@ class Engine:
         self._decode_step = jax.jit(
             lambda p, t, c, l: T.decode_step(
                 p, t, c, l, cfg, compute_dtype=ecfg.compute_dtype))
+        # suffix prefill over per-row cache prefixes (prefix-cache hit
+        # admission); compiles once per suffix bucket length
+        self._prefill_extend = jax.jit(
+            lambda p, t, l, o, c: T.prefill_extend(
+                p, t, l, o, c, cfg,
+                compute_dtype=ecfg.compute_dtype))
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: str, max_new_tokens: Optional[int] = None
-               ) -> int:
+    def submit(self, prompt: str, max_new_tokens: Optional[int] = None,
+               prefix: Optional[str] = None) -> int:
+        """Queue a request.  ``max_new_tokens=None`` falls back to the
+        engine default; an explicit non-positive budget is a caller bug
+        and raises instead of silently decoding the default budget.
+        ``prefix`` declares a reusable leading block of the prompt (the
+        composed retrieval context) for the KV prefix cache — it must
+        be a string prefix of ``prompt``."""
+        if max_new_tokens is None:
+            max_new_tokens = self.ecfg.max_new_tokens
+        elif max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if prefix is not None and not prompt.startswith(prefix):
+            raise ValueError("prefix is not a prefix of prompt")
         rid = self._next_id
         self._next_id += 1
-        self._queue.put((rid, prompt,
-                         max_new_tokens or self.ecfg.max_new_tokens))
+        self._queue.put((rid, prompt, max_new_tokens, prefix))
         return rid
 
-    def generate(self, prompt: str, max_new_tokens: Optional[int] = None
-                 ) -> str:
-        return self.generate_batch([prompt], max_new_tokens)[0]
+    def generate(self, prompt: str, max_new_tokens: Optional[int] = None,
+                 prefix: Optional[str] = None) -> str:
+        return self.generate_batch([prompt], max_new_tokens,
+                                   prefixes=[prefix])[0]
 
     def generate_batch(self, prompts: List[str],
-                       max_new_tokens: Optional[int] = None
+                       max_new_tokens: Optional[int] = None,
+                       prefixes: Optional[List[Optional[str]]] = None
                        ) -> List[str]:
         """Submit a prompt batch before draining so concurrent requests
-        land in slots together and share prefill + decode launches."""
+        land in slots together and share prefill + decode launches.
+        ``prefixes`` optionally declares each prompt's reusable context
+        block for the KV prefix cache (None entries opt out)."""
         if not prompts:
             return []
         self.stats["generate_batches"] += 1
-        rids = [self.submit(p, max_new_tokens) for p in prompts]
+        prefixes = prefixes or [None] * len(prompts)
+        rids = [self.submit(p, max_new_tokens, prefix=px)
+                for p, px in zip(prompts, prefixes)]
         self.run_until_done()
-        return [" ".join(f"tok{t}" for t in self._results.pop(r))
-                for r in rids]
+        out = []
+        for r in rids:
+            toks = self._results.pop(r)
+            if toks and toks[-1] == EOS_ID:
+                # the EOS sentinel is a stop signal, not text: keep it
+                # out of the detokenized answer
+                toks = toks[:-1]
+            out.append(" ".join(f"tok{t}" for t in toks))
+        return out
 
     # ------------------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
@@ -140,6 +203,24 @@ class Engine:
         while length < n:
             length *= 2
         return min(length, self.ecfg.max_seq_len)
+
+    def _prefix_tokens(self, prefix: str, ids: List[int]
+                       ) -> Optional[List[int]]:
+        """Prefix token ids ([BOS] + prefix words) when they survive in
+        ``ids`` intact with a nonempty suffix after them, else None
+        (truncation ate into the prefix, or the prefix/prompt split
+        lands mid-token)."""
+        pt = [BOS_ID] + [int(t) for t in
+                         self.tok.encode(prefix, add_special=False)]
+        if len(pt) < len(ids) and ids[: len(pt)] == pt:
+            return pt
+        return None
+
+    @staticmethod
+    def _prefix_key(ptoks: List[int]) -> bytes:
+        return hashlib.blake2b(
+            np.asarray(ptoks, np.int32).tobytes(),
+            digest_size=16).digest()
 
     def _admit(self) -> None:
         """Drain the queue into free slots with bucketed prefill.
@@ -151,16 +232,40 @@ class Engine:
         is scattered into its slot.  Prompts are truncated
         deterministically to ``max_seq_len - budget - 1`` tokens so an
         over-long request degrades alone instead of overflowing the
-        shared cache."""
+        shared cache.
+
+        With the prefix cache enabled, prompts whose declared prefix
+        hashes to a cached K/V block skip the cold path: the prefix
+        rows are copied into the slot cache and only the suffix runs,
+        bucketed the same way through ``prefill_extend`` (one launch
+        per suffix bucket).  Cold prompts that declared a prefix
+        capture its K/V slice after their bucket launch."""
         free = [i for i, s in enumerate(self.slots) if not s.active]
-        pending = []
+        cold, hits = [], []
         while free and not self._queue.empty():
-            rid, prompt, budget = self._queue.get()
+            rid, prompt, budget, prefix = self._queue.get()
             budget = max(1, min(budget, self.ecfg.max_seq_len - 2))
             ids = self.tok.encode(prompt, add_special=True)
-            ids = ids[: max(1, self.ecfg.max_seq_len - budget - 1)]
-            pending.append((free.pop(0), rid, [int(t) for t in ids],
-                            budget))
+            ids = [int(t) for t in
+                   ids[: max(1, self.ecfg.max_seq_len - budget - 1)]]
+            pkey, plen = None, 0
+            if prefix is not None and self.ecfg.prefix_cache_entries:
+                ptoks = self._prefix_tokens(prefix, ids)
+                if ptoks is not None:
+                    pkey, plen = self._prefix_key(ptoks), len(ptoks)
+            item = (free.pop(0), rid, ids, budget, pkey, plen)
+            # a hit admits through suffix-only prefill when the suffix
+            # bucket still fits behind the prefix; else degrade to cold
+            if pkey is not None and pkey in self._prefix_cache and \
+                    plen + self._bucket_len(len(ids) - plen) \
+                    <= self.ecfg.max_seq_len:
+                hits.append(item)
+            else:
+                cold.append(item)
+        self._admit_cold(cold)
+        self._admit_hits(hits)
+
+    def _admit_cold(self, pending: List[tuple]) -> None:
         if not pending:
             return
         buckets: Dict[int, list] = {}
@@ -170,7 +275,7 @@ class Engine:
         for blen, group in sorted(buckets.items()):
             tokens = np.zeros((self.ecfg.max_batch, blen), np.int32)
             lengths = np.zeros((self.ecfg.max_batch,), np.int32)
-            for j, (_, _, ids, _) in enumerate(group):
+            for j, (_, _, ids, *_rest) in enumerate(group):
                 tokens[j, :len(ids)] = ids
                 lengths[j] = len(ids)
             logits, cache = self._prefill_bucket(
@@ -185,10 +290,72 @@ class Engine:
 
             self.caches = jax.tree.map(scatter, self.caches, cache)
             logits = np.asarray(logits)
-            for j, (i, rid, ids, budget) in enumerate(group):
+            for j, (i, rid, ids, budget, pkey, plen) in \
+                    enumerate(group):
+                if pkey is not None and \
+                        pkey not in self._prefix_cache:
+                    self._capture_prefix(pkey, cache, j, plen)
                 self.slots[i] = _Slot(
                     active=True, length=len(ids), budget=budget,
                     out_tokens=[int(np.argmax(logits[j]))],
+                    request_id=rid)
+
+    def _capture_prefix(self, pkey: bytes, cache, row: int,
+                        plen: int) -> None:
+        """LRU-insert the prefix K/V slice of a freshly prefilled row."""
+        kv = jax.tree.map(lambda c: c[:, row, :, :plen], cache)
+        self._prefix_cache[pkey] = (kv, plen)
+        while len(self._prefix_cache) > self.ecfg.prefix_cache_entries:
+            self._prefix_cache.popitem(last=False)
+
+    def _admit_hits(self, pending: List[tuple]) -> None:
+        """Prefix-cache-hit admission: seed each slot's cache with the
+        reused prefix rows, then ONE ``prefill_extend`` launch per
+        suffix bucket computes only the suffix K/V (global positions,
+        per-row offsets).  Row-wise cache merge keeps every other
+        slot's cache untouched."""
+        if not pending:
+            return
+        buckets: Dict[int, list] = {}
+        for item in pending:
+            slen = len(item[2]) - item[5]
+            buckets.setdefault(self._bucket_len(slen), []).append(item)
+        for blen, group in sorted(buckets.items()):
+            tokens = np.zeros((self.ecfg.max_batch, blen), np.int32)
+            lengths = np.zeros((self.ecfg.max_batch,), np.int32)
+            offsets = np.zeros((self.ecfg.max_batch,), np.int32)
+            for i, rid, ids, budget, pkey, plen in group:
+                kv, _ = self._prefix_cache[pkey]
+                self._prefix_cache.move_to_end(pkey)
+                # slot-indexed batch layout: the launch reads/writes
+                # row i of the live cache directly
+                self.caches = jax.tree.map(
+                    lambda old, pre: old.at[:, i, :, :plen].set(pre),
+                    self.caches, kv)
+                suf = ids[plen:]
+                tokens[i, :len(suf)] = suf
+                lengths[i] = len(suf)
+                offsets[i] = plen
+            logits, new_caches = self._prefill_extend(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(offsets), self.caches)
+            rows = jnp.asarray([i for i, *_ in group], jnp.int32)
+
+            def keep_rows(old, new):
+                return old.at[:, rows].set(new[:, rows])
+
+            self.caches = jax.tree.map(keep_rows, self.caches,
+                                       new_caches)
+            self.stats["prefill_launches"] += 1
+            self.stats["prefill_prompts"] += len(group)
+            self.stats["prefix_hits"] += len(group)
+            self.stats["prefix_tokens_saved"] += sum(
+                item[5] for item in group)
+            logits = np.asarray(logits)
+            for i, rid, ids, budget, pkey, plen in group:
+                self.slots[i] = _Slot(
+                    active=True, length=len(ids), budget=budget,
+                    out_tokens=[int(np.argmax(logits[i]))],
                     request_id=rid)
 
     def step(self) -> int:

@@ -108,6 +108,18 @@ class RAGPipeline:
         report["quantized_scan"] = bool(
             getattr(store, "quantized", False)
             and store._group.quant is not None)
+        # serving-path caches: semantic query-cache movement counters
+        # (epoch-invalidated retrieval reuse) and, with an LM reader
+        # attached, the engine's KV prefix-reuse counters
+        if self.rag.query_cache is not None:
+            report["query_cache"] = \
+                self.rag.query_cache.stats.to_dict()
+        if self.engine is not None:
+            report["prefix_cache"] = {
+                "hits": self.engine.stats["prefix_hits"],
+                "tokens_saved":
+                    self.engine.stats["prefix_tokens_saved"],
+                "entries": len(self.engine._prefix_cache)}
         if report["quantized_scan"]:
             report["coarse_mult"] = store.coarse_mult
             report["scan_bits"] = store.scan_bits
@@ -121,13 +133,21 @@ class RAGPipeline:
         return report
 
     @staticmethod
-    def _prompt(question: str, context: str) -> str:
-        return f"Context:\n{context}\n\nQuestion: {question}\nAnswer:"
+    def _prefix(context: str) -> str:
+        """The reusable context block of the reader prompts — declared
+        to the engine's KV prefix cache so N questions over one
+        retrieved context pay its prefill once.  Ends at a whitespace
+        boundary, so prefix tokens are a prefix of prompt tokens."""
+        return f"Context:\n{context}\n\n"
 
-    @staticmethod
-    def _bridge_prompt(question: str, context: str) -> str:
-        return (f"Context:\n{context}\n\nQuestion: {question}\n"
-                f"Bridge entity:")
+    @classmethod
+    def _prompt(cls, question: str, context: str) -> str:
+        return cls._prefix(context) + f"Question: {question}\nAnswer:"
+
+    @classmethod
+    def _bridge_prompt(cls, question: str, context: str) -> str:
+        return cls._prefix(context) + \
+            f"Question: {question}\nBridge entity:"
 
     def _bridge_fn(self, batched: bool):
         """Bridge resolution for the multihop rounds.  The
@@ -148,8 +168,13 @@ class RAGPipeline:
             prompts = [self._bridge_prompt(questions[i],
                                            retrievals[i].context)
                        for i in gated]
-            outs = (self.engine.generate_batch(prompts) if batched
-                    else [self.engine.generate(p) for p in prompts])
+            prefixes = [self._prefix(retrievals[i].context)
+                        for i in gated]
+            outs = (self.engine.generate_batch(prompts,
+                                               prefixes=prefixes)
+                    if batched
+                    else [self.engine.generate(p, prefix=px)
+                          for p, px in zip(prompts, prefixes)])
             for i, entity in zip(gated, outs):
                 bridges[i] = compose_hop_query(questions[i], entity)
             return bridges
@@ -174,8 +199,12 @@ class RAGPipeline:
         if self.engine is not None:
             prompts = [self._prompt(q, r.context)
                        for q, r in zip(questions, rets)]
-            texts = (self.engine.generate_batch(prompts) if batched
-                     else [self.engine.generate(p) for p in prompts])
+            prefixes = [self._prefix(r.context) for r in rets]
+            texts = (self.engine.generate_batch(prompts,
+                                                prefixes=prefixes)
+                     if batched
+                     else [self.engine.generate(p, prefix=px)
+                           for p, px in zip(prompts, prefixes)])
         else:
             texts = [self.reader.answer(r.bridge_query or q, r.context)
                      for q, r in zip(questions, rets)]
@@ -192,7 +221,8 @@ class RAGPipeline:
                                   and is_hop_question(question)):
             return self._multihop([question], batched=False)[0]
         r = self.rag.query(question, mode=mode)
-        text = (self.engine.generate(self._prompt(question, r.context))
+        text = (self.engine.generate(self._prompt(question, r.context),
+                                     prefix=self._prefix(r.context))
                 if self.engine is not None
                 else self.reader.answer(question, r.context))
         return RAGAnswer(answer=text, context=r.context,
@@ -222,7 +252,8 @@ class RAGPipeline:
             if self.engine is not None:
                 texts = self.engine.generate_batch(
                     [self._prompt(questions[i], r.context)
-                     for i, r in zip(plain, rets)])
+                     for i, r in zip(plain, rets)],
+                    prefixes=[self._prefix(r.context) for r in rets])
             else:
                 texts = [self.reader.answer(questions[i], r.context)
                          for i, r in zip(plain, rets)]

@@ -18,8 +18,12 @@ _PARAMS_CACHE: dict = {}
 
 def make_test_engine(max_batch: int = 2, max_seq_len: int = 64,
                      max_new_tokens: int = 6, seed: int = 0,
+                     prefix_cache_entries: int = 0,
                      **lm_overrides) -> Engine:
-    """Small seeded ``Engine``; LMConfig fields override via kwargs."""
+    """Small seeded ``Engine``; LMConfig fields override via kwargs.
+    ``prefix_cache_entries > 0`` enables KV prefix reuse (differential
+    caching tests build one cached and one cold engine from the same
+    recipe — identical weights, so answers must match tokenwise)."""
     import jax
 
     from repro.models import transformer as T
@@ -35,4 +39,5 @@ def make_test_engine(max_batch: int = 2, max_seq_len: int = 64,
     return Engine(lm, _PARAMS_CACHE[key],
                   EngineConfig(max_batch=max_batch,
                                max_seq_len=max_seq_len,
-                               max_new_tokens=max_new_tokens))
+                               max_new_tokens=max_new_tokens,
+                               prefix_cache_entries=prefix_cache_entries))

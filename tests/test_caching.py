@@ -1,0 +1,301 @@
+"""Serving-path caches: semantic query cache + engine KV prefix reuse.
+
+Two invariants rule this suite:
+
+- the query cache is invalidated *exactly* by the store ``cache_token``
+  (epoch + graph version) — a cached retrieval is never served stale
+  across inserts or committed reshards, while mid-migration queries
+  legitimately keep hitting (the store itself serves the OLD epoch
+  until the atomic install);
+- the KV prefix-reuse hit path is answer-transparent: a prefix-cached
+  engine must produce tokenwise the answers of a weight-identical cold
+  engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.common.config import EraRAGConfig
+from repro.core.erarag import EraRAG
+from repro.core.query_cache import SemanticQueryCache
+from repro.core.retrieve import Retrieval
+from repro.core.store import Hit
+from repro.data.corpus import SyntheticCorpus
+from repro.embed.hashing import HashingEmbedder
+
+pytestmark = pytest.mark.caching
+
+CFG = EraRAGConfig(embed_dim=64, n_hyperplanes=8, s_min=3, s_max=9,
+                   max_layers=2, chunk_tokens=32, top_k=4,
+                   token_budget=256, query_cache=True,
+                   query_cache_size=64)
+
+
+def _build(cfg=CFG, n_docs=12):
+    corpus = SyntheticCorpus.generate(n_docs=n_docs, n_topics=3, seed=0)
+    rag = EraRAG(cfg, HashingEmbedder(dim=cfg.embed_dim))
+    rag.insert_docs(corpus.docs)
+    return rag, corpus
+
+
+# ----------------------------------------------------------------------
+# SemanticQueryCache unit behavior
+# ----------------------------------------------------------------------
+
+TOK = (0, 1)
+KEY = (4, "collapsed", 256, 0.6)
+
+
+def _ret(ctx):
+    return Retrieval(hits=[Hit("n", 1.0, 0, seq=0)], context=ctx,
+                     n_tokens=1)
+
+
+def _unit(seed=0, dim=16):
+    rng = np.random.default_rng(seed)
+    e = rng.normal(size=dim).astype(np.float32)
+    return e / np.linalg.norm(e)
+
+
+def test_exact_hit_and_key_isolation():
+    c = SemanticQueryCache(capacity=8)
+    e = _unit()
+    assert c.lookup(TOK, KEY, e) is None
+    c.put(TOK, KEY, e, _ret("ctx"))
+    hit = c.lookup(TOK, KEY, e)
+    assert hit is not None and hit.context == "ctx"
+    # a different retrieval key must not serve this entry
+    assert c.lookup(TOK, (8, "detailed", 256, 0.6), e) is None
+    assert c.stats.hits_exact == 1 and c.stats.misses == 2
+
+
+def test_semantic_hit_under_threshold_cache():
+    c = SemanticQueryCache(capacity=8, threshold=0.8)
+    exact_only = SemanticQueryCache(capacity=8, threshold=1.0)
+    e1 = _unit(0)
+    near = e1 + 0.05 * _unit(1)
+    near = near / np.linalg.norm(near)
+    assert float(near @ e1) > 0.8          # test precondition
+    for cache in (c, exact_only):
+        cache.put(TOK, KEY, e1, _ret("ctx"))
+    hit = c.lookup(TOK, KEY, near)
+    assert hit is not None and hit.context == "ctx"
+    assert c.stats.hits_semantic == 1
+    # threshold 1.0 keeps only the exact path
+    assert exact_only.lookup(TOK, KEY, near) is None
+
+
+def test_token_move_drops_generation():
+    c = SemanticQueryCache(capacity=8)
+    e = _unit()
+    c.put(TOK, KEY, e, _ret("ctx"))
+    assert c.lookup((0, 2), KEY, e) is None       # graph version moved
+    assert c.stats.invalidations == 1 and len(c) == 0
+    c.put((0, 2), KEY, e, _ret("ctx2"))
+    assert c.lookup((1, 2), KEY, e) is None       # epoch moved
+    assert c.stats.invalidations == 2
+
+
+def test_lru_eviction_bounds():
+    c = SemanticQueryCache(capacity=2)
+    embs = [_unit(s) for s in range(3)]
+    for i, e in enumerate(embs):
+        c.put(TOK, KEY, e, _ret(f"c{i}"))
+        assert len(c) <= 2
+    assert c.stats.evictions == 1
+    assert c.lookup(TOK, KEY, embs[0]) is None    # oldest evicted
+    assert c.lookup(TOK, KEY, embs[2]).context == "c2"
+
+
+def test_cached_payloads_are_copy_isolated():
+    c = SemanticQueryCache(capacity=8)
+    e = _unit()
+    c.put(TOK, KEY, e, _ret("ctx"))
+    first = c.lookup(TOK, KEY, e)
+    first.hits.append(Hit("rogue", 0.0, 0))
+    assert len(c.lookup(TOK, KEY, e).hits) == 1
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        SemanticQueryCache(capacity=0)
+    with pytest.raises(ValueError):
+        SemanticQueryCache(threshold=0.0)
+    with pytest.raises(ValueError):
+        EraRAGConfig(query_cache_threshold=1.5)
+
+
+# ----------------------------------------------------------------------
+# EraRAG integration: hits, key scoping, exact invalidation
+# ----------------------------------------------------------------------
+
+def test_exact_repeat_serves_cache_without_a_round():
+    rag, corpus = _build()
+    q = corpus.qa[0].question
+    r1 = rag.query(q)
+    rounds = rag.stats["retrieval_rounds"]
+    r2 = rag.query(q)
+    assert rag.stats["retrieval_rounds"] == rounds
+    assert rag.query_cache.stats.hits_exact == 1
+    assert r2.context == r1.context
+    assert [h.node_id for h in r2.hits] == [h.node_id for h in r1.hits]
+    assert r2.epoch == r1.epoch
+
+
+def test_mode_and_k_scope_the_cache_key():
+    rag, corpus = _build()
+    q = corpus.qa[0].question
+    rag.query(q)
+    rag.query(q, mode="detailed")
+    rag.query(q, k=2)
+    assert rag.query_cache.stats.hits == 0
+    rag.query(q, mode="detailed")
+    assert rag.query_cache.stats.hits_exact == 1
+
+
+def test_cache_on_matches_cache_off():
+    rag_c, corpus = _build()
+    rag_u, _ = _build(dataclasses.replace(CFG, query_cache=False))
+    assert rag_u.query_cache is None
+    questions = [qa.question for qa in corpus.qa[:6]]
+    for mode in ("collapsed", "detailed"):
+        # second replay hits the cache; both must match the uncached rag
+        for _ in range(2):
+            a = rag_c.query_batch(questions, mode=mode)
+            b = rag_u.query_batch(questions, mode=mode)
+            assert [r.context for r in a] == [r.context for r in b]
+    assert rag_c.query_cache.stats.hits_exact == 2 * len(questions)
+
+
+def test_insert_invalidates_and_next_query_sees_new_doc():
+    rag, _ = _build()
+    rag_u, _ = _build(dataclasses.replace(CFG, query_cache=False))
+    q = "What is the capital of Flooglestan ?"
+    rag.query(q)
+    doc = ("new", "The capital of Flooglestan is Quuxville .")
+    rag.insert_docs([doc])
+    rag_u.insert_docs([doc])
+    r2 = rag.query(q)
+    assert rag.query_cache.stats.invalidations >= 1
+    assert "Quuxville" in r2.context
+    assert r2.context == rag_u.query(q).context
+
+
+# ----------------------------------------------------------------------
+# migration semantics: old epoch keeps serving, install invalidates
+# ----------------------------------------------------------------------
+
+def test_mid_migration_serves_old_epoch_install_invalidates():
+    from repro.lifecycle.reshard import Resharder
+    rag, corpus = _build(dataclasses.replace(CFG, index_shards=2))
+    q = corpus.qa[0].question
+    r1 = rag.query(q)
+    tok1 = rag.store.cache_token
+    mig = Resharder().begin(rag.store, 3, "caching-test")
+    while not mig.done:
+        mig.step()
+        # the store serves the OLD epoch until the atomic install, so
+        # the cache token is unchanged and hits are legitimate
+        r = rag.query(q)
+        assert r.context == r1.context and r.epoch == r1.epoch
+        assert rag.store.cache_token == tok1
+    assert rag.query_cache.stats.hits_exact >= 1
+    mig.install()
+    assert rag.store.cache_token != tok1
+    r2 = rag.query(q)
+    assert rag.query_cache.stats.invalidations >= 1
+    assert r2.epoch == r1.epoch + 1
+    # an epoch-swapped reshard is result-transparent: fresh post-install
+    # retrieval composes the same context
+    assert r2.context == r1.context
+
+
+def test_explicit_reshard_clears_cache():
+    rag, corpus = _build()          # flat store
+    q = corpus.qa[0].question
+    r1 = rag.query(q)
+    rag.reshard(2)                  # flat -> sharded: NEW store object
+    assert len(rag.query_cache) == 0
+    r2 = rag.query(q)
+    assert r2.context == r1.context
+
+
+# ----------------------------------------------------------------------
+# engine KV prefix reuse: answer-transparent, LRU-bounded
+# ----------------------------------------------------------------------
+
+CTX = "The capital of France is Paris and the river is Seine . "
+
+
+def _prompts(n, ctx=CTX):
+    prefix = f"Context:\n{ctx}\n\n"
+    return prefix, [prefix + f"Question: q{i} capital\nAnswer:"
+                    for i in range(n)]
+
+
+@pytest.mark.serving
+def test_prefix_reuse_tokenwise_parity(engine_fixture):
+    cold = engine_fixture(max_batch=2)
+    warm = engine_fixture(max_batch=2, prefix_cache_entries=4)
+    prefix, prompts = _prompts(5)
+    a = cold.generate_batch(prompts)
+    b = warm.generate_batch(prompts, prefixes=[prefix] * len(prompts))
+    assert a == b
+    # wave 1 (2 slots) is cold and captures; every later admission hits
+    assert warm.stats["prefix_hits"] == 3
+    assert warm.stats["prefix_tokens_saved"] > 0
+    assert cold.stats["prefix_hits"] == 0
+
+
+@pytest.mark.serving
+def test_prefix_cache_lru_bound(engine_fixture):
+    cold = engine_fixture(max_batch=2)
+    warm = engine_fixture(max_batch=2, prefix_cache_entries=1)
+    pa, prompts_a = _prompts(2)
+    pb, prompts_b = _prompts(2, ctx="A completely different context "
+                                    "about mountains and rivers . ")
+    prompts = prompts_a + prompts_b + prompts_a
+    prefixes = [pa] * 2 + [pb] * 2 + [pa] * 2
+    b = warm.generate_batch(prompts, prefixes=prefixes)
+    assert len(warm._prefix_cache) <= 1
+    assert b == cold.generate_batch(prompts)
+
+
+@pytest.mark.serving
+def test_prefix_declared_but_disabled_is_inert(engine_fixture):
+    eng = engine_fixture(max_batch=2)           # prefix cache off
+    prefix, prompts = _prompts(3)
+    out = eng.generate_batch(prompts, prefixes=[prefix] * 3)
+    assert eng.stats["prefix_hits"] == 0
+    assert len(eng._prefix_cache) == 0
+    assert out == eng.generate_batch(prompts)   # plain path unchanged
+
+
+@pytest.mark.serving
+def test_prefix_mismatch_raises(engine_fixture):
+    eng = engine_fixture()
+    with pytest.raises(ValueError):
+        eng.submit("prompt text", prefix="not a prefix")
+
+
+# ----------------------------------------------------------------------
+# pipeline end-to-end: cached pipeline answers == cold pipeline answers
+# ----------------------------------------------------------------------
+
+@pytest.mark.serving
+def test_pipeline_with_both_caches_matches_cold(engine_fixture):
+    from repro.serving.rag_pipeline import RAGPipeline
+    small = dataclasses.replace(CFG, token_budget=24, chunk_tokens=16)
+    rag, corpus = _build(small)
+    questions = [corpus.qa[0].question, corpus.qa[1].question] * 2
+    cold = RAGPipeline(rag, engine=engine_fixture(max_batch=2))
+    warm = RAGPipeline(rag, engine=engine_fixture(
+        max_batch=2, prefix_cache_entries=4))
+    a = cold.answer_batch(questions)
+    b = warm.answer_batch(questions)
+    assert [x.answer for x in a] == [x.answer for x in b]
+    assert warm.engine.stats["prefix_hits"] > 0
+    report = warm.index_report()
+    assert report["prefix_cache"]["hits"] > 0
+    assert report["query_cache"]["hits"] > 0
