@@ -1,0 +1,236 @@
+"""Streaming-ingest benchmark: the write path off the query path.
+
+Three phases, results to ``BENCH_ingest.json``:
+
+- **burst replay**: a document burst streams through ``IngestService``
+  ticks interleaved with live query batches.  Asserted: the final
+  graph and every retrieval result are *bitwise* equal to a
+  synchronous ``insert_docs`` of the same burst (node order, scores,
+  contexts), and the worst query latency observed during ingestion
+  stays under ``latency_ceiling`` x the quiet-index median — ingest
+  work happens in ticks, never inside a query.
+- **batched vs serial summarization**: the same multi-segment insert
+  driven through two weight-identical LM summarizer engines, one
+  batching segment summaries through ``generate_batch`` (bucketed
+  prefill + shared decode slots), one issuing one ``generate`` per
+  segment.  Asserted: identical graphs, >= ``min_launch_ratio`` fewer
+  engine launches and >= ``min_time_ratio`` update wall-clock win for
+  the batched path.
+- **summary-cache churn**: insert -> delete -> reinsert with the
+  content-keyed summary cache on vs off.  Asserted: identical graphs,
+  cache hits > 0, and strictly fewer summarization prompt tokens
+  (``tokens_in``) on the churn reinsert.
+
+On CPU CI the absolute numbers are toy-scale; parity, launch counts,
+token savings and the relative ratios are the tracked signals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, bench_corpus, csv_row, \
+    make_embedder
+from repro.core.erarag import EraRAG
+from repro.core.summarize import LMSummarizer
+from repro.ingest import IngestService
+
+
+def _assert_bitwise_equal(a: EraRAG, b: EraRAG, queries: List[str]
+                          ) -> None:
+    assert list(a.graph.nodes) == list(b.graph.nodes), \
+        "node creation order diverged"
+    for nid in a.graph.nodes:
+        na, nb = a.graph.nodes[nid], b.graph.nodes[nid]
+        assert na.text == nb.text and na.key == nb.key
+        assert np.array_equal(na.embedding, nb.embedding)
+    for q in queries:
+        ra, rb = a.query(q), b.query(q)
+        assert [(h.node_id, h.score) for h in ra.hits] == \
+            [(h.node_id, h.score) for h in rb.hits], q
+        assert ra.context == rb.context, q
+
+
+def _phase_burst(cfg, n_docs: int, burst: int, batch: int,
+                 latency_ceiling: float, report: dict,
+                 rows: List[str]) -> None:
+    corpus = bench_corpus(n_docs=n_docs + burst)
+    base, burst_docs = corpus.docs[:n_docs], corpus.docs[n_docs:]
+    queries = [qa.question for qa in corpus.qa][:3 * batch]
+
+    live = EraRAG(cfg, make_embedder(cfg))
+    live.insert_docs(base)
+    live.store.refresh()
+
+    def _blocks():
+        return [queries[i:i + batch]
+                for i in range(0, len(queries), batch)]
+
+    # quiet-index baseline (first block also warms jit)
+    lat: List[float] = []
+    for blk in _blocks() * 2:
+        t0 = time.perf_counter()
+        live.query_batch(blk)
+        lat.append(time.perf_counter() - t0)
+    baseline = float(np.median(lat))
+
+    svc = IngestService(live, docs_per_tick=max(2, burst // 8),
+                        embed_batch=16)
+    svc.submit_many(burst_docs)
+    during: List[float] = []
+    ticks = 0
+    bi = 0
+    blocks = _blocks()
+    while not svc.idle:
+        svc.tick()
+        ticks += 1
+        blk = blocks[bi % len(blocks)]
+        bi += 1
+        t0 = time.perf_counter()
+        live.query_batch(blk)
+        during.append(time.perf_counter() - t0)
+    worst = float(np.max(during))
+    ratio = worst / max(baseline, 1e-9)
+
+    twin = EraRAG(cfg, make_embedder(cfg))
+    twin.insert_docs(base)
+    for kind, payload in svc.committed_ops:
+        assert kind == "insert"
+        twin.insert_docs(payload)
+    _assert_bitwise_equal(live, twin, queries)
+    assert ratio <= latency_ceiling, \
+        (f"query latency during ingest {ratio:.1f}x over quiet "
+         f"baseline (ceiling {latency_ceiling}x)")
+    report["burst"] = {
+        "base_docs": n_docs, "burst_docs": burst, "ticks": ticks,
+        "baseline_query_s": baseline, "worst_during_s": worst,
+        "latency_ratio": ratio, "latency_ceiling": latency_ceiling,
+        "service": svc.report(), "parity": "bitwise"}
+    rows.append(csv_row(
+        f"ingest/burst_b{batch}", 1e6 * worst,
+        f"parity=bitwise;ticks={ticks};"
+        f"latency_ratio={ratio:.1f}x_of_{latency_ceiling:g}x"))
+
+
+def _phase_batched_lm(n_docs: int, min_launch_ratio: float,
+                      min_time_ratio: float, seq_len: int,
+                      decode_tokens: int, report: dict,
+                      rows: List[str]) -> None:
+    from repro.serving.testing import make_test_engine
+
+    # small segments -> many summaries per update; short chunks keep
+    # the summarizer prompts inside the toy engine's sequence budget
+    cfg = dataclasses.replace(BENCH_CFG, chunk_tokens=16, s_min=2,
+                              s_max=4, summary_cache_size=0)
+    cfgs = {"batched": cfg,
+            "serial": dataclasses.replace(cfg, batch_summaries=False)}
+    corpus = bench_corpus(n_docs=n_docs)
+    out: dict = {}
+    rags: dict = {}
+    for name, c in cfgs.items():
+        eng = make_test_engine(max_batch=8, max_seq_len=seq_len,
+                               max_new_tokens=decode_tokens, seed=0)
+        summ = LMSummarizer(engine=eng, max_tokens=decode_tokens)
+        # warmup on a throwaway graph: both paths pay their jit
+        # compiles here so the timed insert measures launches, not
+        # compilation
+        warm = EraRAG(c, make_embedder(c), summarizer=summ)
+        warm.insert_docs(corpus.docs[: max(4, n_docs // 4)])
+        launches0 = eng.launches
+        rag = EraRAG(c, make_embedder(c), summarizer=summ)
+        t0 = time.perf_counter()
+        rag.insert_docs(corpus.docs)
+        dt = time.perf_counter() - t0
+        out[name] = {"update_s": dt,
+                     "launches": eng.launches - launches0,
+                     "generate_batches": eng.stats["generate_batches"],
+                     "segments": sum(r.n_resummarized
+                                     for r in rag.reports)}
+        rags[name] = rag
+    assert list(rags["batched"].graph.nodes) == \
+        list(rags["serial"].graph.nodes)
+    assert all(rags["batched"].graph.nodes[n].text ==
+               rags["serial"].graph.nodes[n].text
+               for n in rags["batched"].graph.nodes), \
+        "batched summarization diverged from serial"
+    launch_ratio = out["serial"]["launches"] / \
+        max(1, out["batched"]["launches"])
+    time_ratio = out["serial"]["update_s"] / \
+        max(out["batched"]["update_s"], 1e-9)
+    assert launch_ratio >= min_launch_ratio, \
+        (f"batched summarization launch win {launch_ratio:.2f}x < "
+         f"{min_launch_ratio}x ({out})")
+    assert time_ratio >= min_time_ratio, \
+        (f"batched summarization wall-clock win {time_ratio:.2f}x < "
+         f"{min_time_ratio}x ({out})")
+    report["batched_summaries"] = {
+        **out, "launch_ratio": launch_ratio,
+        "time_ratio": time_ratio,
+        "min_launch_ratio": min_launch_ratio,
+        "min_time_ratio": min_time_ratio}
+    rows.append(csv_row(
+        "ingest/batched_lm_update",
+        1e6 * out["batched"]["update_s"],
+        f"launch_ratio={launch_ratio:.2f}x;"
+        f"time_ratio={time_ratio:.2f}x;"
+        f"segments={out['batched']['segments']}"))
+
+
+def _phase_cache_churn(cfg, n_docs: int, report: dict,
+                       rows: List[str]) -> None:
+    corpus = bench_corpus(n_docs=n_docs)
+    victims = [d for d, _ in corpus.docs[-max(2, n_docs // 6):]]
+    reinsert = [d for d in corpus.docs if d[0] in set(victims)]
+    out: dict = {}
+    rags: dict = {}
+    for name, c in {"cached": cfg, "cold": dataclasses.replace(
+            cfg, summary_cache_size=0)}.items():
+        rag = EraRAG(c, make_embedder(c))
+        rag.insert_docs(corpus.docs)
+        rag.remove_docs(victims)
+        rep = rag.insert_docs(reinsert)
+        out[name] = {"tokens_in": rep.tokens_in,
+                     "cache_hits": rep.summary_cache_hits,
+                     "tokens_saved": rep.summary_tokens_saved}
+        rags[name] = rag
+    assert list(rags["cached"].graph.nodes) == \
+        list(rags["cold"].graph.nodes), "cache changed the graph"
+    assert out["cached"]["cache_hits"] > 0, out
+    assert out["cached"]["tokens_in"] < out["cold"]["tokens_in"], \
+        f"summary cache saved no prompt tokens on churn: {out}"
+    saved_frac = 1.0 - out["cached"]["tokens_in"] / \
+        max(1, out["cold"]["tokens_in"])
+    report["cache_churn"] = {**out, "tokens_in_saved_frac": saved_frac}
+    rows.append(csv_row(
+        "ingest/cache_churn", 0.0,
+        f"hits={out['cached']['cache_hits']};"
+        f"tokens_saved={out['cached']['tokens_saved']};"
+        f"tokens_in_saved_frac={saved_frac:.2f}"))
+
+
+def run(n_docs: int = 40, burst: int = 24, batch: int = 4,
+        min_launch_ratio: float = 2.0, min_time_ratio: float = 1.5,
+        latency_ceiling: float = 50.0, lm_docs: int = 16,
+        seq_len: int = 64, decode_tokens: int = 4,
+        out_json: str | None = "BENCH_ingest.json") -> List[str]:
+    report: dict = {}
+    rows: List[str] = []
+    _phase_burst(BENCH_CFG, n_docs, burst, batch, latency_ceiling,
+                 report, rows)
+    _phase_batched_lm(lm_docs, min_launch_ratio, min_time_ratio,
+                      seq_len, decode_tokens, report, rows)
+    _phase_cache_churn(BENCH_CFG, n_docs, report, rows)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -18,6 +18,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         chunk_size,
         dynamic_insertion,
         incremental_quality,
+        ingest,
         initial_coverage,
         kernel_bench,
         quantized_scan,
@@ -59,6 +60,10 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # a mid-replay insert + reshard, hit-rate floor, and cached-QPS
         # speedup are all asserted (AssertionError -> nonzero exit)
         "query_cache": lambda: query_cache.run(n_docs=half),
+        # streaming ingest: burst-while-querying bitwise parity, the
+        # batched-summarization launch/wall-clock floors, and summary-
+        # cache churn savings are all asserted (nonzero exit on trip)
+        "ingest": lambda: ingest.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -91,6 +96,12 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         suites["query_cache"] = lambda: query_cache.run(
             n_docs=24, replay=24, token_budget=192, seq_len=256,
             min_hit=0.3, min_speedup=1.1)
+        # parity + cache-churn asserts hold at smoke scale; the
+        # batched-vs-serial ratios shrink with segment count, so the
+        # launch/wall-clock floors relax (measured ~2.5x/~1.6x here)
+        suites["ingest"] = lambda: ingest.run(
+            n_docs=24, burst=12, lm_docs=10, min_launch_ratio=1.5,
+            min_time_ratio=1.1, latency_ceiling=100.0)
     return suites
 
 

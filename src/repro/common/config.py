@@ -287,6 +287,27 @@ class EraRAGConfig:
     query_cache: bool = False
     query_cache_size: int = 1024
     query_cache_threshold: float = 1.0
+    # batched segment summarization (core/graph.py): collect every
+    # segment needing (re)summarization across a layer update and
+    # materialize them in ONE Summarizer.summarize_batch call — the
+    # LMSummarizer routes it through the engine's bucketed prefill so
+    # an N-segment update costs O(length buckets), not N, launches.
+    # False keeps the serial per-segment loop (the differential
+    # oracle; results are bitwise identical either way).
+    batch_summaries: bool = True
+    # content-keyed summary cache: segment summaries keyed by a digest
+    # over (layer, member ids) — the _node_id basis — so a re-formed
+    # segment with unchanged membership reuses its summary instead of
+    # paying the engine again.  Invalidation is structural (any member
+    # change produces a new key); summarizers are deterministic, so
+    # hits are bitwise the regenerated text.  0 disables the cache.
+    summary_cache_size: int = 512
+    # streaming ingestion service (repro.ingest): bounded document
+    # intake and per-tick work quanta for the chunk -> batched embed ->
+    # LSH-route -> commit pipeline that runs off the query path
+    ingest_max_pending_docs: int = 1024
+    ingest_docs_per_tick: int = 8
+    ingest_embed_batch: int = 64
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -314,6 +335,13 @@ class EraRAGConfig:
         if not (0.0 < self.query_cache_threshold <= 1.0):
             raise ValueError("query_cache_threshold must be in (0, 1] "
                              "(1.0 = exact-match hits only)")
+        if self.summary_cache_size < 0:
+            raise ValueError("summary_cache_size must be >= 0 "
+                             "(0 disables the cache)")
+        if self.ingest_max_pending_docs < 1 \
+                or self.ingest_docs_per_tick < 1 \
+                or self.ingest_embed_batch < 1:
+            raise ValueError("ingest_* settings must be >= 1")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":
         """Tab V ablation: scale tolerance delta around the mean size."""

@@ -42,6 +42,27 @@ context prefill) is an engine-side knob: ``EngineConfig.
 prefix_cache_entries`` in ``repro/serving/engine.py``, default 0 (off).
 ``benchmarks/query_cache.py`` -> ``BENCH_query_cache.json`` measures
 both levers on a Zipf-skewed replay and proves invalidation parity.
+
+The *write* path (growing corpora — the paper's headline) is governed
+by the ingest fields, all behavior-preserving accelerations (the graph
+they produce is bitwise the serial one):
+
+- ``batch_summaries``: materialize every segment a layer update
+  touches in ONE ``Summarizer.summarize_batch`` call — through
+  ``LMSummarizer`` that is one bucketed-prefill ``generate_batch``
+  per update instead of one engine launch per segment.  False keeps
+  the serial loop (the differential oracle).
+- ``summary_cache_size``: content-keyed LRU of segment summaries
+  (digest over layer + member node ids, the ``_node_id`` basis) so
+  re-formed segments with unchanged membership skip the engine; 0
+  disables.  Persisted in ``state_dict``; hit/token-savings counters
+  surface in ``UpdateReport`` and ``index_report()["ingest"]``.
+- ``ingest_max_pending_docs`` / ``ingest_docs_per_tick`` /
+  ``ingest_embed_batch``: the ``repro.ingest.IngestService`` intake
+  bound and per-``tick()`` work quanta (docs chunked, chunks embedded
+  per embedder launch).  ``benchmarks/ingest.py`` ->
+  ``BENCH_ingest.json`` proves burst-ingest-while-querying parity and
+  the batched-summarization launch/wall-clock wins.
 """
 from repro.common.config import EraRAGConfig
 
@@ -71,4 +92,24 @@ ERARAG_QUANTIZED = EraRAGConfig(
     quantized_scan=True,
     coarse_mult=4,
     scan_bits=64,
+)
+
+# the streaming-ingest serving profile: same hierarchy/retrieval
+# hyper-parameters, tuned for continuous growth under live traffic —
+# small per-tick quanta keep each ingest step short relative to a
+# query batch, and a deep summary cache absorbs churn
+ERARAG_STREAMING = EraRAGConfig(
+    n_hyperplanes=12,
+    s_min=4,
+    s_max=12,
+    max_layers=4,
+    embed_dim=256,
+    chunk_tokens=64,
+    top_k=8,
+    token_budget=2048,
+    batch_summaries=True,
+    summary_cache_size=2048,
+    ingest_max_pending_docs=4096,
+    ingest_docs_per_tick=4,
+    ingest_embed_batch=32,
 )

@@ -119,6 +119,19 @@ class EraRAG:
         self.reports.append(report)
         return report
 
+    def remove_docs(self, doc_ids: Iterable[str]) -> UpdateReport:
+        """Shrink the corpus: drop every chunk of the given documents
+        and propagate the removal up the hierarchy (the same selective
+        update as inserts — affected segments re-partition, unaffected
+        ones keep their ids).  Unknown ids are ignored, so removal is
+        idempotent."""
+        wanted = set(doc_ids)
+        victims = [nid for nid, n in self.graph.nodes.items()
+                   if n.layer == 0 and n.doc_id in wanted]
+        report = self.graph.remove_chunks(victims)
+        self.reports.append(report)
+        return report
+
     def query(self, text: str, k: Optional[int] = None,
               mode: str = "collapsed",
               bridge_fn: Optional[BridgeFn] = None) -> Retrieval:

@@ -5,9 +5,19 @@ graph (Alg 1 is the degenerate case of Alg 3 — the paper presents them
 separately but the update rules subsume construction).  Per-layer
 update: route new nodes to segments by code key, repartition only the
 affected contiguous regions, re-summarize only changed segments, and
-propagate (added, removed) parent sets upward.  Node ids are content
+propagate (added, removed) parent sets upward.  ``remove_chunks``
+drives the same machinery for shrinking corpora.  Node ids are content
 addresses (hash of layer, children, text) so an update that regenerates
 an identical summary converges instead of cascading.
+
+Summarization — the dominant update cost (paper Fig 8) — is batched:
+every segment a layer update touches is collected and materialized in
+ONE ``Summarizer.summarize_batch`` call (``_materialize_summaries``),
+and a content-keyed ``SummaryCache`` short-circuits segments whose
+membership digest was summarized before.  Both are behavior-preserving
+accelerations: node-creation order matches the serial path exactly and
+summarizers are deterministic, so the graph (and the vector store's
+row order) is bitwise identical with them on or off.
 
 Locality guarantee (tested): segments outside the affected regions keep
 their identity, parent, and summary — the structural basis for the
@@ -25,7 +35,8 @@ import numpy as np
 from repro.common.config import EraRAGConfig
 from repro.core.lsh import HyperplaneLSH
 from repro.core.partition import partition_items, sort_items
-from repro.core.summarize import ExtractiveSummarizer, Summarizer
+from repro.core.summarize import ExtractiveSummarizer, SummaryCache, \
+    SummaryResult, Summarizer
 from repro.data.chunker import Chunk
 from repro.data.tokenizer import HashTokenizer
 
@@ -60,11 +71,16 @@ class Segment:
 @dataclass
 class UpdateReport:
     n_new_chunks: int = 0
+    n_removed_chunks: int = 0
     n_resummarized: int = 0
     n_affected_segments: int = 0
     n_new_layers: int = 0
     tokens_in: int = 0
     tokens_out: int = 0
+    # content-keyed summary-cache movement: segments whose summary was
+    # reused instead of regenerated, and the prompt tokens that saved
+    summary_cache_hits: int = 0
+    summary_tokens_saved: int = 0
     time_embed: float = 0.0
     time_hash: float = 0.0
     time_partition: float = 0.0
@@ -106,6 +122,11 @@ class EraGraph:
             embedder, cfg.summary_max_tokens, self.tokenizer)
         self.lsh = HyperplaneLSH(cfg.embed_dim, cfg.n_hyperplanes,
                                  cfg.seed)
+        # content-keyed summary reuse (persisted with the snapshot);
+        # None when disabled — every materialization then regenerates
+        self.summary_cache: Optional[SummaryCache] = \
+            SummaryCache(cfg.summary_cache_size) \
+            if getattr(cfg, "summary_cache_size", 0) > 0 else None
         self.nodes: Dict[str, Node] = {}
         # layer_order[l]: insertion-ordered node-id set for layer l
         self.layer_order: List[Dict[str, None]] = []
@@ -136,24 +157,39 @@ class EraGraph:
         return list(self.layer_order[layer]) if layer < self.n_layers \
             else []
 
-    def insert_chunks(self, chunks: Sequence[Chunk]) -> UpdateReport:
-        """Insert leaf chunks; build or incrementally update the graph."""
+    def insert_chunks(self, chunks: Sequence[Chunk],
+                      precomputed: Optional[Dict[str, Tuple]] = None
+                      ) -> UpdateReport:
+        """Insert leaf chunks; build or incrementally update the graph.
+
+        ``precomputed`` optionally maps chunk ids to ``(embedding,
+        key)`` rows prepared ahead of time (the streaming
+        ``IngestService`` embeds and LSH-routes arriving chunks in
+        per-tick batches off the query path).  The embedder and hash
+        are row-deterministic, so a precomputed insert is bitwise the
+        synchronous one; any chunk missing from the map is embedded
+        inline as before."""
         report = UpdateReport()
         fresh = [c for c in chunks if c.chunk_id not in self.nodes]
         report.n_new_chunks = len(fresh)
         if not fresh:
             return report
 
-        t0 = time.perf_counter()
-        embs = self.embedder.encode([c.text for c in fresh])
-        report.time_embed += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        keys = self.lsh.hash_ints(embs)
-        report.time_hash += time.perf_counter() - t0
+        pre = dict(precomputed) if precomputed else {}
+        need = [c for c in fresh if c.chunk_id not in pre]
+        if need:
+            t0 = time.perf_counter()
+            embs_new = self.embedder.encode([c.text for c in need])
+            report.time_embed += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            keys_new = self.lsh.hash_ints(embs_new)
+            report.time_hash += time.perf_counter() - t0
+            for c, e, k in zip(need, embs_new, keys_new):
+                pre[c.chunk_id] = (e, int(k))
 
         added: List[str] = []
-        for c, e, k in zip(fresh, embs, keys):
+        for c in fresh:
+            e, k = pre[c.chunk_id]
             node = Node(node_id=c.chunk_id, layer=0, text=c.text,
                         embedding=np.asarray(e, dtype=np.float32),
                         key=int(k), doc_id=c.doc_id,
@@ -162,16 +198,43 @@ class EraGraph:
             self._pending_added.append(node.node_id)
             added.append(node.node_id)
 
-        removed: List[str] = []
+        self._propagate(added, [], report)
+        self.version += 1
+        self._log_delta()
+        return report
+
+    def remove_chunks(self, chunk_ids: Sequence[str]) -> UpdateReport:
+        """Delete leaf chunks (shrinking / churning corpora).
+
+        Removals ride the same per-layer machinery as inserts: each
+        affected segment repartitions (merging with neighbors when it
+        falls below ``s_min``) and re-summarizes, (added, removed)
+        parent sets propagate upward, and untouched segments keep
+        their identity and summaries.  Ids absent from the graph (or
+        naming non-leaf nodes) are ignored."""
+        report = UpdateReport()
+        present = [c for c in dict.fromkeys(chunk_ids)
+                   if c in self.nodes and self.nodes[c].layer == 0]
+        report.n_removed_chunks = len(present)
+        if not present:
+            return report
+        for nid in present:
+            self.nodes.pop(nid)
+            self._pending_removed.append(nid)
+        self._propagate([], list(present), report)
+        self.version += 1
+        self._log_delta()
+        return report
+
+    def _propagate(self, added: List[str], removed: List[str],
+                   report: UpdateReport) -> None:
+        """Run the per-layer update loop until the churn settles."""
         layer = 0
         while added or removed:
             added, removed, rep = self._update_layer(layer, added,
                                                      removed)
             report.merge(rep)
             layer += 1
-        self.version += 1
-        self._log_delta()
-        return report
 
     # ------------------------------------------------------------------
     # delta log (vector-store index maintenance)
@@ -219,32 +282,93 @@ class EraGraph:
             self.segments.append([])
             self.member_seg.append({})
 
-    def _summarize_segment(self, layer: int, members: Tuple[str, ...],
-                           report: UpdateReport) -> str:
-        """Create (or reuse) the parent summary node for ``members``."""
-        texts = [self.nodes[m].text for m in members]
+    def _materialize_summaries(self, layer: int,
+                               jobs: Sequence[Tuple[str, ...]],
+                               report: UpdateReport) -> List[str]:
+        """Create the parent summary nodes for ``jobs`` (ordered member
+        tuples of layer ``layer``); returns parent ids in job order.
+
+        This is the single summarization choke point for a layer
+        update: every segment needing a (re)summary is collected here
+        and the cache misses are materialized in ONE
+        ``summarize_batch`` call when ``cfg.batch_summaries`` is set
+        (the LMSummarizer turns that into one ``generate_batch`` —
+        bucketed prefill, O(length buckets) launches for N segments).
+        With batching off the misses run through the serial
+        ``summarize`` loop — the differential oracle.  Node-creation
+        order is the job order either way, so both paths leave
+        ``nodes`` / ``_pending_added`` (and therefore the vector
+        store's row order) bitwise identical.
+
+        The content-keyed ``summary_cache`` short-circuits jobs whose
+        (layer, member-id) digest was summarized before: summarizers
+        are deterministic, so the cached text IS the regenerated text
+        and only the engine cost disappears (counted in
+        ``summary_cache_hits`` / ``summary_tokens_saved``)."""
+        if not jobs:
+            return []
+        texts = [[self.nodes[m].text for m in members]
+                 for members in jobs]
+        results: List[Optional[SummaryResult]] = [None] * len(jobs)
+        digests: List[str] = []
+        miss: List[int] = []
+        cache = self.summary_cache
         t0 = time.perf_counter()
-        res = self.summarizer.summarize(texts)
+        for i, members in enumerate(jobs):
+            if cache is None:
+                miss.append(i)
+                continue
+            digest = SummaryCache.digest(layer + 1, members)
+            digests.append(digest)
+            hit = cache.get(digest)
+            if hit is None:
+                miss.append(i)
+                continue
+            saved = sum(self.tokenizer.count(t) for t in texts[i])
+            cache.stats.tokens_saved += saved
+            report.summary_cache_hits += 1
+            report.summary_tokens_saved += saved
+            results[i] = SummaryResult(hit, 0, 0)
+        if miss:
+            batch = [texts[i] for i in miss]
+            if self.cfg.batch_summaries and \
+                    hasattr(self.summarizer, "summarize_batch"):
+                outs = self.summarizer.summarize_batch(batch)
+            else:
+                outs = [self.summarizer.summarize(t) for t in batch]
+            for i, res in zip(miss, outs):
+                results[i] = res
+                if cache is not None:
+                    cache.put(digests[i], res.text)
         report.time_summarize += time.perf_counter() - t0
-        report.tokens_in += res.tokens_in
-        report.tokens_out += res.tokens_out
-        report.n_resummarized += 1
+        for i in miss:
+            report.tokens_in += results[i].tokens_in
+            report.tokens_out += results[i].tokens_out
+        report.n_resummarized += len(jobs)
 
         t0 = time.perf_counter()
-        emb = self.embedder.encode([res.text])[0].astype(np.float32)
+        embs = np.asarray(
+            self.embedder.encode([r.text for r in results]),
+            dtype=np.float32)
         report.time_embed += time.perf_counter() - t0
         t0 = time.perf_counter()
-        key = int(self.lsh.hash_ints(emb[None, :])[0])
+        keys = self.lsh.hash_ints(embs)
         report.time_hash += time.perf_counter() - t0
 
-        nid = _node_id(layer + 1, members, res.text)
-        if nid not in self.nodes:
-            self._pending_added.append(nid)
-        self.nodes[nid] = Node(node_id=nid, layer=layer + 1,
-                               text=res.text, embedding=emb, key=key,
-                               children=tuple(members),
-                               n_tokens=res.tokens_out)
-        return nid
+        parents: List[str] = []
+        for members, res, emb, key in zip(jobs, results, embs, keys):
+            nid = _node_id(layer + 1, members, res.text)
+            if nid not in self.nodes:
+                self._pending_added.append(nid)
+            # n_tokens is recounted from the text (== tokens_out on a
+            # regeneration) so cache hits produce identical nodes
+            self.nodes[nid] = Node(
+                node_id=nid, layer=layer + 1, text=res.text,
+                embedding=np.asarray(emb, np.float32), key=int(key),
+                children=tuple(members),
+                n_tokens=self.tokenizer.count(res.text))
+            parents.append(nid)
+        return parents
 
     def _route(self, layer: int, key: int) -> int:
         """Index of the segment owning code ``key`` (rightmost whose
@@ -320,7 +444,11 @@ class EraGraph:
         groups = self._merge_intervals(regions)
         added_parents: List[str] = []
         removed_parents: List[str] = []
-        # process right-to-left so list splices keep earlier indices
+        # pass 1 — plan right-to-left (the splice order): decide every
+        # group's partition before any mutation and collect the member
+        # tuples that need a fresh summary, in node-creation order
+        plan: List[Tuple[int, int, List, Dict, Set[str]]] = []
+        jobs: List[Tuple[str, ...]] = []
         for lo, hi in reversed(groups):
             items = []
             for idx in range(lo, hi + 1):
@@ -331,14 +459,28 @@ class EraGraph:
             parts = partition_items(items, self.cfg.s_min,
                                     self.cfg.s_max)
             report.n_affected_segments += hi - lo + 1
-
             old_by_members = {segs[i].members: segs[i]
                               for i in range(lo, hi + 1)}
             old_parents = {segs[i].parent for i in range(lo, hi + 1)
                            if segs[i].parent}
+            for part in parts:
+                members = tuple(nid for _, nid in part)
+                if members not in old_by_members:
+                    jobs.append(members)
+            plan.append((lo, hi, parts, old_by_members, old_parents))
+        report.time_partition += time.perf_counter() - t0
+
+        # ONE batched materialization for the whole layer update
+        # (segments are disjoint, so member tuples are unique keys)
+        by_members = dict(zip(
+            jobs, self._materialize_summaries(layer, jobs, report)))
+
+        # pass 2 — splice in plan (right-to-left) order so earlier
+        # indices stay valid
+        t0 = time.perf_counter()
+        for lo, hi, parts, old_by_members, old_parents in plan:
             new_segs: List[Segment] = []
             new_parents: Set[str] = set()
-            report.time_partition += time.perf_counter() - t0
             for part in parts:
                 members = tuple(nid for _, nid in part)
                 reuse = old_by_members.get(members)
@@ -347,12 +489,10 @@ class EraGraph:
                     if reuse.parent:
                         new_parents.add(reuse.parent)
                     continue
-                parent = self._summarize_segment(layer, members, report)
                 new_segs.append(Segment(
-                    members=members, min_key=part[0][0], parent=parent))
-                new_parents.add(parent)
-            t0 = time.perf_counter()
-
+                    members=members, min_key=part[0][0],
+                    parent=by_members[members]))
+                new_parents.add(by_members[members])
             segs[lo:hi + 1] = new_segs
             for seg in new_segs:
                 for nid in seg.members:
@@ -413,14 +553,12 @@ class EraGraph:
         parts = partition_items(items, self.cfg.s_min, self.cfg.s_max)
         report.time_partition += time.perf_counter() - t0
         report.n_new_layers += 1
-        new_segs: List[Segment] = []
-        parents: List[str] = []
-        for part in parts:
-            members = tuple(nid for _, nid in part)
-            parent = self._summarize_segment(layer, members, report)
-            new_segs.append(Segment(
-                members=members, min_key=part[0][0], parent=parent))
-            parents.append(parent)
+        jobs = [tuple(nid for _, nid in part) for part in parts]
+        parents = self._materialize_summaries(layer, jobs, report)
+        new_segs = [Segment(members=members, min_key=part[0][0],
+                            parent=parent)
+                    for part, members, parent
+                    in zip(parts, jobs, parents)]
         self.segments[layer] = new_segs
         for seg in new_segs:
             for nid in seg.members:
@@ -495,6 +633,11 @@ class EraGraph:
             "delta_log": [
                 [v, list(a), list(r)]
                 for v, (a, r) in sorted(self._delta_log.items())],
+            # content-keyed summary reuse survives the snapshot: a
+            # restored graph's churn re-summarizations hit instead of
+            # paying the engine again
+            "summary_cache": self.summary_cache.state_dict()
+            if self.summary_cache is not None else [],
         }
 
     @classmethod
@@ -529,4 +672,6 @@ class EraGraph:
             g._delta_log = {       # stores then fall back to a rebuild
                 int(v): (tuple(a), tuple(r))
                 for v, a, r in state["delta_log"]}
+        if g.summary_cache is not None and state.get("summary_cache"):
+            g.summary_cache.load_state(state["summary_cache"])
         return g

@@ -10,12 +10,32 @@ Two implementations behind one protocol:
   assigned archs) for the full-system path; used by examples and the
   TPU serving benchmarks, where summarization is the prefill-heavy
   workload the roofline §Perf LM hillclimb optimizes.
+
+Both speak the batched protocol: ``summarize_batch`` materializes a
+whole update's worth of segment summaries at once.  The extractive
+path is a loop (already engine-free); the LM path routes the batch
+through ``engine.generate_batch`` — bucketed pow-2 prefill shares one
+launch per length bucket, and the shared ``prompt_prefix`` is declared
+as the engine's ``prefix=`` so the KV prefix cache (when enabled)
+prefills the instruction block once for the whole batch.  Batched
+results are exactly the serial results (the engine's batch path is
+tokenwise-equal to sequential decode — PR 4's differential suite), so
+``EraGraph`` can swap between them freely.
+
+``SummaryCache`` is the content-keyed reuse layer: segment summaries
+keyed by a digest over the (layer, member-id) basis of ``_node_id`` —
+member ids are themselves content addresses, so a re-routed segment
+whose membership is unchanged reuses its summary instead of paying the
+engine again.  The graph owns one, persists it in ``state_dict``, and
+reports hit/miss/tokens-saved movement per update.
 """
 from __future__ import annotations
 
+import hashlib
 import re
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import List, Protocol, Sequence, Tuple
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -33,6 +53,79 @@ class SummaryResult:
 
 class Summarizer(Protocol):
     def summarize(self, texts: Sequence[str]) -> SummaryResult: ...
+
+    def summarize_batch(self, batches: Sequence[Sequence[str]]
+                        ) -> List[SummaryResult]: ...
+
+
+@dataclass
+class SummaryCacheStats:
+    hits: int = 0
+    misses: int = 0
+    tokens_saved: int = 0     # prompt tokens NOT sent thanks to hits
+
+    def to_dict(self) -> Dict[str, int]:
+        return dict(vars(self))
+
+
+class SummaryCache:
+    """Content-keyed LRU of segment summaries.
+
+    Keys are digests over ``(layer, member node ids)`` — the same basis
+    ``graph._node_id`` hashes, and member ids are content addresses
+    themselves — so a key identifies a segment by *what it contains*,
+    not where routing happened to place it.  Any membership change
+    (add, remove, or a member whose own text changed and therefore
+    carries a new id) produces a different key: invalidation is
+    structural, never TTL-based, and a stale summary can never be
+    reused.  Summarizers are deterministic, so a hit returns exactly
+    the text a regeneration would have produced — the cache only
+    removes the engine cost, measured in ``stats.tokens_saved``.
+    """
+
+    def __init__(self, capacity: int = 512):
+        if capacity < 1:
+            raise ValueError("SummaryCache capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[str, str]" = OrderedDict()
+        self.stats = SummaryCacheStats()
+
+    @staticmethod
+    def digest(layer: int, members: Sequence[str]) -> str:
+        h = hashlib.blake2b(digest_size=12)
+        h.update(str(layer).encode())
+        for m in members:
+            h.update(m.encode("utf-8"))
+            h.update(b"\x00")
+        return h.hexdigest()
+
+    def get(self, key: str) -> Optional[str]:
+        text = self._entries.get(key)
+        if text is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return text
+
+    def put(self, key: str, text: str) -> None:
+        self._entries[key] = text
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def state_dict(self) -> List[List[str]]:
+        return [[k, v] for k, v in self._entries.items()]
+
+    def load_state(self, entries: Sequence[Sequence[str]]) -> None:
+        for k, v in entries:
+            self.put(str(k), str(v))
 
 
 @dataclass
@@ -78,6 +171,12 @@ class ExtractiveSummarizer:
         return SummaryResult(summary, tokens_in,
                              self.tokenizer.count(summary))
 
+    def summarize_batch(self, batches: Sequence[Sequence[str]]
+                        ) -> List[SummaryResult]:
+        """Engine-free path: per-segment selection is already cheap and
+        independent, so the batch is a loop (bitwise the serial path)."""
+        return [self.summarize(texts) for texts in batches]
+
 
 @dataclass
 class LMSummarizer:
@@ -89,8 +188,32 @@ class LMSummarizer:
     prompt_prefix: str = ("Summarize the following passages into one "
                           "coherent paragraph:\n")
 
+    def _prompt(self, texts: Sequence[str]) -> str:
+        return self.prompt_prefix + "\n".join(texts)
+
     def summarize(self, texts: Sequence[str]) -> SummaryResult:
-        prompt = self.prompt_prefix + "\n".join(texts)
+        prompt = self._prompt(texts)
         tokens_in = self.tokenizer.count(prompt)
-        out = self.engine.generate(prompt, max_new_tokens=self.max_tokens)
+        # the shared instruction block is declared as the engine's
+        # reusable prefix: with the KV prefix cache enabled, repeated
+        # summarization calls re-prefill only the passage suffix
+        out = self.engine.generate(prompt, max_new_tokens=self.max_tokens,
+                                   prefix=self.prompt_prefix)
         return SummaryResult(out, tokens_in, self.tokenizer.count(out))
+
+    def summarize_batch(self, batches: Sequence[Sequence[str]]
+                        ) -> List[SummaryResult]:
+        """One ``generate_batch`` call for the whole segment batch: the
+        engine buckets prompts by padded pow-2 length (ONE prefill
+        launch per bucket, micro-batched decode), so an N-segment
+        update costs O(buckets), not N, launches.  Answers are
+        tokenwise those of N sequential ``generate`` calls."""
+        if not batches:
+            return []
+        prompts = [self._prompt(texts) for texts in batches]
+        outs = self.engine.generate_batch(
+            prompts, max_new_tokens=self.max_tokens,
+            prefixes=[self.prompt_prefix] * len(prompts))
+        return [SummaryResult(out, self.tokenizer.count(p),
+                              self.tokenizer.count(out))
+                for p, out in zip(prompts, outs)]

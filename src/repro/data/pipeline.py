@@ -60,6 +60,7 @@ class Prefetcher:
                  end_step: Optional[int] = None):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._worker, args=(make_batch, start_step, end_step),
             daemon=True)
@@ -69,16 +70,34 @@ class Prefetcher:
         step = start
         while not self._stop.is_set() and (end is None or step < end):
             try:
-                self._q.put((step, make_batch(step)), timeout=0.5)
+                item = (step, make_batch(step))
+            except BaseException as e:  # noqa: BLE001 — consumer re-raises
+                # a make_batch failure must still reach the consumer:
+                # stash it and fall through to the sentinel, else
+                # __iter__ blocks forever on a dead worker
+                self._error = e
+                break
+            try:
+                self._q.put(item, timeout=0.5)
                 step += 1
             except queue.Full:
                 continue
-        self._q.put(None)
+        # terminal sentinel, stop-aware like the main loop: a full
+        # queue after end_step must not wedge the thread past close()
+        while not self._stop.is_set():
+            try:
+                self._q.put(None, timeout=0.5)
+                return
+            except queue.Full:
+                continue
 
     def __iter__(self) -> Iterator:
         while True:
             item = self._q.get()
             if item is None:
+                if self._error is not None:
+                    err, self._error = self._error, None
+                    raise err
                 return
             yield item
 

@@ -1,0 +1,32 @@
+"""Streaming ingestion: the growing-corpus path off the query path.
+
+The paper's pitch is continuous corpus growth, but a caller-driven
+``insert_docs`` stalls serving for the whole chunk + embed + summarize
+pipeline of every burst.  ``IngestService`` makes ingestion a bounded
+background process that interleaves with serving the same way the
+lifecycle manager does — one small work quantum per ``tick()``:
+
+- **chunk**: split up to ``ingest_docs_per_tick`` queued documents;
+- **embed**: encode + LSH-route up to ``ingest_embed_batch`` prepared
+  chunks in one embedder call;
+- **commit**: ONE ``insert_chunks(precomputed=...)`` graph update for
+  the fully-prepared burst, then one store ``refresh()`` (the
+  lifecycle turn that stages the delta off the query path).
+
+Because the embedder and hash are row-deterministic and the commit
+replays chunks in exact submission order, a background-ingested burst
+is **bitwise identical** to a synchronous ``insert_docs`` of the same
+documents — same node ids, same store row order, same retrieval
+results.  The differential suite and ``benchmarks/ingest.py`` assert
+exactly that.
+
+Summarization cost (the dominant update cost, paper Fig 8) is handled
+underneath by ``EraGraph``'s batched ``summarize_batch`` materialization
+and the content-keyed ``SummaryCache`` (``core/summarize.py``), so the
+commit tick pays O(length buckets) engine launches, not one per
+segment.
+"""
+from repro.ingest.service import IngestQueueFull, IngestService, \
+    IngestStats
+
+__all__ = ["IngestQueueFull", "IngestService", "IngestStats"]

@@ -166,6 +166,16 @@ class Engine:
         self._queue.put((rid, prompt, max_new_tokens, prefix))
         return rid
 
+    @property
+    def launches(self) -> int:
+        """Total kernel launches issued so far (bucketed prefill +
+        micro-batched decode).  The single number ingest benchmarks and
+        the batched-summarization assertion compare: an N-segment
+        update through ``generate_batch`` must cost O(length buckets),
+        not N, launch growth."""
+        return (self.stats["prefill_launches"]
+                + self.stats["decode_launches"])
+
     def generate(self, prompt: str, max_new_tokens: Optional[int] = None,
                  prefix: Optional[str] = None) -> str:
         return self.generate_batch([prompt], max_new_tokens,

@@ -83,10 +83,19 @@ class ExtractiveReader:
 
 
 class RAGPipeline:
-    def __init__(self, rag: EraRAG, reader=None, engine=None):
+    def __init__(self, rag: EraRAG, reader=None, engine=None,
+                 ingest=None):
         self.rag = rag
         self.reader = reader or ExtractiveReader()
         self.engine = engine  # optional LM reader
+        self.ingest = ingest  # optional repro.ingest.IngestService
+
+    def attach_ingest(self, service) -> None:
+        """Attach a streaming ``IngestService`` so its queue/commit
+        counters surface in ``index_report()['ingest']``.  The serving
+        loop interleaves ``service.tick()`` with ``answer_batch`` calls
+        — the service never runs threads of its own."""
+        self.ingest = service
 
     def index_report(self) -> dict:
         """Serving-side index health: size + refresh counters, the
@@ -120,6 +129,19 @@ class RAGPipeline:
                 "tokens_saved":
                     self.engine.stats["prefix_tokens_saved"],
                 "entries": len(self.engine._prefix_cache)}
+        # write-path health: summary-cache movement (content-keyed
+        # segment-summary reuse) and, when a streaming IngestService is
+        # attached, its queue depth / burst-commit counters
+        ingest: dict = {}
+        if self.rag.graph.summary_cache is not None:
+            ingest["summary_cache"] = \
+                self.rag.graph.summary_cache.stats.to_dict()
+            ingest["summary_cache_entries"] = \
+                len(self.rag.graph.summary_cache)
+        if self.ingest is not None:
+            ingest["service"] = self.ingest.report()
+        if ingest:
+            report["ingest"] = ingest
         if report["quantized_scan"]:
             report["coarse_mult"] = store.coarse_mult
             report["scan_bits"] = store.scan_bits

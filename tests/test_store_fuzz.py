@@ -216,6 +216,81 @@ def test_store_script_matches_oracle_seeded():
         run_script(seed)
 
 
+def run_ingest_script(seed: int, n_steps: int = 24) -> None:
+    """Random interleavings of ingest-service actions with live
+    queries and deletes, checked against a synchronous twin that
+    replays the committed op log — every query the live index answers
+    mid-ingest must be bitwise what the twin answers."""
+    from repro.common.config import EraRAGConfig
+    from repro.core.erarag import EraRAG
+    from repro.embed.hashing import HashingEmbedder
+    from repro.ingest import IngestQueueFull, IngestService
+
+    rng = np.random.default_rng(seed)
+    cfg = EraRAGConfig(embed_dim=16, n_hyperplanes=6, s_min=2, s_max=4,
+                       max_layers=3, chunk_tokens=12, top_k=5,
+                       token_budget=256, ingest_max_pending_docs=64)
+    live = EraRAG(cfg, HashingEmbedder(dim=cfg.embed_dim))
+    twin = EraRAG(cfg, HashingEmbedder(dim=cfg.embed_dim))
+    svc = IngestService(live, docs_per_tick=2, embed_batch=3)
+    next_doc = 0
+    submitted: List[str] = []
+    n_replayed = 0
+
+    def sync_twin():
+        nonlocal n_replayed
+        for kind, payload in svc.committed_ops[n_replayed:]:
+            (twin.insert_docs if kind == "insert"
+             else twin.remove_docs)(payload)
+        n_replayed = len(svc.committed_ops)
+
+    def text(i: int) -> str:
+        words = " ".join(f"w{int(w)}" for w in
+                         rng.integers(0, 40, size=8))
+        return f"doc {i} {words}. tail {i % 5} sentence."
+
+    for _ in range(n_steps):
+        op = rng.choice(["submit", "tick", "tick", "remove", "query"])
+        if op == "submit":
+            for _ in range(int(rng.integers(1, 4))):
+                did = f"d{next_doc}"
+                next_doc += 1
+                try:
+                    svc.submit(did, text(next_doc))
+                    submitted.append(did)
+                except IngestQueueFull:
+                    break
+        elif op == "tick":
+            svc.tick()
+        elif op == "remove" and submitted:
+            pick = submitted.pop(int(rng.integers(len(submitted))))
+            svc.remove([pick])
+        elif op == "query":
+            sync_twin()
+            q = f"w{int(rng.integers(0, 40))} tail {int(rng.integers(5))}"
+            a, b = live.query(q), twin.query(q)
+            assert [(h.node_id, h.score) for h in a.hits] == \
+                [(h.node_id, h.score) for h in b.hits], (seed, q)
+    svc.drain()
+    sync_twin()
+    assert list(live.graph.nodes) == list(twin.graph.nodes), seed
+    assert live.store.size == twin.store.size
+
+
+@requires_hypothesis
+@given(st.integers(min_value=0, max_value=100))
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_ingest_interleaving_matches_sync_twin(seed):
+    run_ingest_script(seed)
+
+
+def test_ingest_interleaving_matches_sync_twin_seeded():
+    """Deterministic fallback: fixed seeds cover the same invariants."""
+    for seed in (0, 1, 2):
+        run_ingest_script(seed)
+
+
 def test_trimmed_log_forces_rebuild_then_recovers():
     """When the delta log no longer covers the store's version span the
     store must fall back to one full rebuild — and still be correct."""
