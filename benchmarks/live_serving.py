@@ -1,0 +1,129 @@
+"""Live-serving scenario benchmark: the sustained-traffic gate.
+
+Drives a full seeded "live corpus day" (``serving/live_harness.py``)
+through ``RAGPipeline`` + ``IngestService`` + the lifecycle manager
+with an LM reader attached: insert bursts, removals, Zipf-skewed flat
+and multihop query batches, a mid-stream checkpoint/restore, tombstone
+compactions, and one policy-triggered epoch-swapped reshard migration.
+Results go to ``BENCH_live_serving.json``:
+
+- per-phase p50/p99 query-batch latency and per-subsystem launch
+  diffs (embedder encodes, summarizer materializations, retrieval
+  sweep rounds, engine prefill/decode launches, cache movement);
+- the migration window: turns, probe rounds, and availability —
+  every mid-migration probe must be served from the OLD epoch and be
+  bitwise the pre-migration answer (asserted inside the harness);
+- cache hit rates (semantic query cache, content-keyed summary
+  cache) and accumulated store maintenance counters.
+
+Hard gates (AssertionError -> nonzero exit via run.py): bitwise
+answer parity of the live index against a synchronous replay of
+``committed_ops`` (always — smoke included), migration availability
+1.0, and floors on compactions and cache hits.  The latency-ratio
+ceiling (worst phase p99 over the quiet baseline p50) is the only
+smoke-relaxed floor; on CPU CI the absolute numbers are toy-scale
+and the tracked signals are the invariants and counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import tempfile
+from typing import List
+
+from benchmarks.common import BENCH_CFG, bench_corpus, csv_row, \
+    make_embedder
+from repro.serving.live_harness import LiveHarness, make_schedule
+
+
+def run(n_docs: int = 40, seed: int = 0, query_batch: int = 4,
+        queries_per_phase: int = 4, token_budget: int = 192,
+        seq_len: int = 256, decode_tokens: int = 4,
+        with_engine: bool = True, compact_threshold: float = 0.15,
+        min_compactions: int = 1, min_query_cache_hits: int = 1,
+        min_summary_cache_hits: int = 1,
+        latency_ratio_ceiling: float = 100.0,
+        out_json: str | None = "BENCH_live_serving.json"
+        ) -> List[str]:
+    cfg = dataclasses.replace(
+        BENCH_CFG, index_shards=2, query_cache=True,
+        token_budget=token_budget)
+    corpus = bench_corpus(n_docs=n_docs)
+    schedule = make_schedule(corpus, seed=seed,
+                             query_batch=query_batch,
+                             queries_per_phase=queries_per_phase)
+
+    engine_factory = None
+    if with_engine:
+        from repro.serving.testing import make_test_engine
+        engine_factory = lambda: make_test_engine(  # noqa: E731
+            max_batch=max(8, query_batch),
+            max_seq_len=seq_len, max_new_tokens=decode_tokens, seed=0)
+
+    with tempfile.TemporaryDirectory() as snap_dir:
+        harness = LiveHarness(cfg, lambda: make_embedder(cfg),
+                              schedule, snap_dir,
+                              engine_factory=engine_factory,
+                              compact_threshold=compact_threshold)
+        # parity, old-epoch availability, and migration completion are
+        # asserted inside run()
+        report = harness.run()
+
+    mig = report["migration"]
+    sc = report["store_counters"]
+    qc_hits = int(report["launch_totals"].get("query_cache.hits", 0))
+    sum_hits = int(report["launch_totals"].get(
+        "summary_cache.hits", 0))
+    assert sc["compactions"] >= min_compactions, \
+        (f"churn phase forced no compactions "
+         f"({sc['compactions']} < {min_compactions}): {sc}")
+    assert qc_hits >= min_query_cache_hits, \
+        f"query cache absorbed no repeats ({qc_hits})"
+    assert sum_hits >= min_summary_cache_hits, \
+        f"summary cache missed the churn reinsert ({sum_hits})"
+
+    timed = [p for p in report["phases"] if "p50_ms" in p]
+    base_p50 = next(p["p50_ms"] for p in timed
+                    if p["name"] == "baseline")
+    worst_p99 = max(p["p99_ms"] for p in timed)
+    ratio = worst_p99 / max(base_p50, 1e-9)
+    assert ratio <= latency_ratio_ceiling, \
+        (f"worst phase p99 {ratio:.1f}x over quiet baseline p50 "
+         f"(ceiling {latency_ratio_ceiling:g}x)")
+    report["latency"] = {"baseline_p50_ms": base_p50,
+                         "worst_p99_ms": worst_p99,
+                         "ratio": ratio,
+                         "ceiling": latency_ratio_ceiling}
+    report["floors"] = {"min_compactions": min_compactions,
+                        "min_query_cache_hits": min_query_cache_hits,
+                        "min_summary_cache_hits":
+                            min_summary_cache_hits}
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+            f.write("\n")
+
+    rows = []
+    for p in timed:
+        rows.append(csv_row(
+            f"live_serving/{p['name']}", 1e3 * p["p50_ms"],
+            f"p99_ms={p['p99_ms']:.2f};batches={p['query_batches']};"
+            f"answers={p['answers']}"))
+    rows.append(csv_row(
+        "live_serving/migration", 0.0,
+        f"availability={mig['availability']:.2f};"
+        f"turns={mig['turns']};shards={mig['old_shards']}->"
+        f"{mig['new_shards']};epoch={mig['old_epoch']}->"
+        f"{mig['new_epoch']}"))
+    rows.append(csv_row(
+        "live_serving/parity", 0.0,
+        f"parity=bitwise;nodes={report['parity']['nodes']};"
+        f"compactions={sc['compactions']};qc_hits={qc_hits};"
+        f"sum_hits={sum_hits}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

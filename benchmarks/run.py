@@ -21,6 +21,7 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         ingest,
         initial_coverage,
         kernel_bench,
+        live_serving,
         quantized_scan,
         query_batch,
         query_cache,
@@ -64,6 +65,11 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         # batched-summarization launch/wall-clock floors, and summary-
         # cache churn savings are all asserted (nonzero exit on trip)
         "ingest": lambda: ingest.run(n_docs=half),
+        # sustained-traffic "live corpus day": bursts + removals +
+        # Zipf queries + checkpoint/restore + a policy-triggered
+        # migration; bitwise replay parity and old-epoch availability
+        # are asserted (nonzero exit on trip)
+        "live_serving": lambda: live_serving.run(n_docs=half),
         "kernel_bench": kernel_bench.run,
         "roofline": roofline.run,
     }
@@ -102,6 +108,12 @@ def build_suites(n: int, smoke: bool = False) -> dict:
         suites["ingest"] = lambda: ingest.run(
             n_docs=24, burst=12, lm_docs=10, min_launch_ratio=1.5,
             min_time_ratio=1.1, latency_ceiling=100.0)
+        # parity, old-epoch availability, and the cache/compaction
+        # floors hold at smoke scale; only the latency ceiling
+        # relaxes (tiny batches make the percentiles jitter-bound)
+        suites["live_serving"] = lambda: live_serving.run(
+            n_docs=24, queries_per_phase=3,
+            latency_ratio_ceiling=500.0)
     return suites
 
 

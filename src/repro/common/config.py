@@ -266,6 +266,7 @@ class EraRAGConfig:
     reshard_tombstone_threshold: float = 0.0
     reshard_min_rows: int = 256      # ignore toy indexes
     reshard_max_shards: int = 64     # skew-growth ceiling
+    reshard_growth_factor: int = 2   # shard-count growth per trigger
     # two-stage quantized retrieval (kernels/quantized_scan): serve
     # search through a coarse Hamming scan over packed LSH sign-bit
     # codes, then an exact fp32 rescore of the top C = coarse_mult *
@@ -308,6 +309,10 @@ class EraRAGConfig:
     ingest_max_pending_docs: int = 1024
     ingest_docs_per_tick: int = 8
     ingest_embed_batch: int = 64
+    # ops (insert bursts + removals) are bounded separately from the
+    # per-document count: removals carry no docs, so a doc-only bound
+    # lets alternating submit/remove grow the op queue without limit
+    ingest_max_pending_ops: int = 4096
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -325,6 +330,9 @@ class EraRAGConfig:
             raise ValueError("reshard_min_rows must be >= 0")
         if self.reshard_max_shards < 1:
             raise ValueError("reshard_max_shards must be >= 1")
+        if self.reshard_growth_factor < 2:
+            raise ValueError("reshard_growth_factor must be >= 2 "
+                             "(a skew trigger must grow the count)")
         if self.coarse_mult < 1:
             raise ValueError("coarse_mult must be >= 1 (C = "
                              "coarse_mult * k must cover the top-k)")
@@ -340,7 +348,8 @@ class EraRAGConfig:
                              "(0 disables the cache)")
         if self.ingest_max_pending_docs < 1 \
                 or self.ingest_docs_per_tick < 1 \
-                or self.ingest_embed_batch < 1:
+                or self.ingest_embed_batch < 1 \
+                or self.ingest_max_pending_ops < 1:
             raise ValueError("ingest_* settings must be >= 1")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":

@@ -127,6 +127,11 @@ class EraGraph:
         self.summary_cache: Optional[SummaryCache] = \
             SummaryCache(cfg.summary_cache_size) \
             if getattr(cfg, "summary_cache_size", 0) > 0 else None
+        # summarizer launch accounting for index_report()["launches"]:
+        # one launch per summarize/summarize_batch call issued from
+        # _materialize_summaries, segments counted per cache miss
+        self.stats = {"summarize_launches": 0,
+                      "segments_summarized": 0}
         self.nodes: Dict[str, Node] = {}
         # layer_order[l]: insertion-ordered node-id set for layer l
         self.layer_order: List[Dict[str, None]] = []
@@ -334,8 +339,11 @@ class EraGraph:
             if self.cfg.batch_summaries and \
                     hasattr(self.summarizer, "summarize_batch"):
                 outs = self.summarizer.summarize_batch(batch)
+                self.stats["summarize_launches"] += 1
             else:
                 outs = [self.summarizer.summarize(t) for t in batch]
+                self.stats["summarize_launches"] += len(batch)
+            self.stats["segments_summarized"] += len(batch)
             for i, res in zip(miss, outs):
                 results[i] = res
                 if cache is not None:

@@ -33,6 +33,9 @@ class HashingEmbedder:
         # fixed projection, float32, column-normalized
         self._proj = rng.standard_normal((n_features, dim)).astype(
             np.float32) / np.sqrt(dim)
+        # launch accounting for the live-serving harness: one "launch"
+        # per encode() call (the batching unit), texts counted per row
+        self.stats = {"encode_calls": 0, "texts_encoded": 0}
 
     def _features(self, text: str) -> np.ndarray:
         counts = np.zeros(self.n_features, dtype=np.float32)
@@ -49,6 +52,8 @@ class HashingEmbedder:
         """-> (n, dim) float32, rows L2-normalized."""
         if isinstance(texts, str):
             raise TypeError("pass a sequence of texts, not a single str")
+        self.stats["encode_calls"] += 1
+        self.stats["texts_encoded"] += len(texts)
         feats = np.stack([self._features(t) for t in texts])
         vecs = feats @ self._proj
         norms = np.linalg.norm(vecs, axis=1, keepdims=True)

@@ -26,7 +26,8 @@ and the content-keyed ``SummaryCache`` (``core/summarize.py``), so the
 commit tick pays O(length buckets) engine launches, not one per
 segment.
 """
-from repro.ingest.service import IngestQueueFull, IngestService, \
-    IngestStats
+from repro.ingest.service import IngestDrainExhausted, \
+    IngestQueueFull, IngestService, IngestStats
 
-__all__ = ["IngestQueueFull", "IngestService", "IngestStats"]
+__all__ = ["IngestDrainExhausted", "IngestQueueFull", "IngestService",
+           "IngestStats"]

@@ -27,8 +27,26 @@ from repro.data.chunker import Chunk, chunk_text
 
 
 class IngestQueueFull(RuntimeError):
-    """Raised by ``submit`` when the bounded intake queue is at
-    capacity — backpressure for the producer, never silent drops."""
+    """Raised by ``submit`` / ``remove`` when the bounded intake queue
+    is at capacity — backpressure for the producer, never silent
+    drops.  Both the per-document bound (``max_pending_docs``) and the
+    op bound (``max_pending_ops``, covering removals too) apply."""
+
+
+class IngestDrainExhausted(RuntimeError):
+    """Raised by ``drain`` when ``max_ticks`` elapsed with ops still
+    queued — exhaustion is an error, never a silent partial drain."""
+
+
+def _knob(value: Optional[int], default: int, name: str) -> int:
+    """Resolve a ctor knob: ``None`` means the config default; any
+    explicit value (including 0) is validated, not silently replaced
+    — ``int(x or default)`` treats 0 as "unset", the falsy-fallback
+    bug class."""
+    n = int(default if value is None else value)
+    if n < 1:
+        raise ValueError(f"{name} must be >= 1, got {n}")
+    return n
 
 
 @dataclass
@@ -80,14 +98,20 @@ class IngestService:
 
     def __init__(self, rag, max_pending_docs: Optional[int] = None,
                  docs_per_tick: Optional[int] = None,
-                 embed_batch: Optional[int] = None):
+                 embed_batch: Optional[int] = None,
+                 max_pending_ops: Optional[int] = None):
         cfg = rag.cfg
         self.rag = rag
-        self.max_pending_docs = int(max_pending_docs
-                                    or cfg.ingest_max_pending_docs)
-        self.docs_per_tick = int(docs_per_tick
-                                 or cfg.ingest_docs_per_tick)
-        self.embed_batch = int(embed_batch or cfg.ingest_embed_batch)
+        self.max_pending_docs = _knob(
+            max_pending_docs, cfg.ingest_max_pending_docs,
+            "max_pending_docs")
+        self.docs_per_tick = _knob(
+            docs_per_tick, cfg.ingest_docs_per_tick, "docs_per_tick")
+        self.embed_batch = _knob(
+            embed_batch, cfg.ingest_embed_batch, "embed_batch")
+        self.max_pending_ops = _knob(
+            max_pending_ops, cfg.ingest_max_pending_ops,
+            "max_pending_ops")
         self._ops: List[object] = []
         self.stats = IngestStats()
         # replay log of landed operations, in commit order:
@@ -116,6 +140,7 @@ class IngestService:
                 f"{self.pending_docs} docs pending "
                 f"(max {self.max_pending_docs})")
         if not self._ops or not isinstance(self._ops[-1], _InsertOp):
+            self._check_op_capacity()
             self._ops.append(_InsertOp())
         self._ops[-1].docs.append((str(doc_id), str(text)))
         self.stats.submitted_docs += 1
@@ -129,10 +154,20 @@ class IngestService:
     def remove(self, doc_ids: Sequence[str]) -> None:
         """Queue a document removal.  Removals are ordering barriers:
         docs submitted earlier commit first, docs submitted later form
-        a new burst behind the removal."""
+        a new burst behind the removal.  Raises ``IngestQueueFull`` at
+        the op bound — removals carry no docs, so the per-doc bound
+        alone would let alternating submit/remove grow ``_ops``
+        without limit."""
         ids = [str(d) for d in doc_ids]
         if ids:
+            self._check_op_capacity()
             self._ops.append(_RemoveOp(ids))
+
+    def _check_op_capacity(self) -> None:
+        if self.pending_ops >= self.max_pending_ops:
+            raise IngestQueueFull(
+                f"{self.pending_ops} ops pending "
+                f"(max {self.max_pending_ops})")
 
     # -- the work loop -------------------------------------------------
     def tick(self) -> str:
@@ -198,11 +233,19 @@ class IngestService:
         return "commit"
 
     def drain(self, max_ticks: int = 1_000_000) -> int:
-        """Tick until the queue is empty; returns ticks consumed."""
+        """Tick until the queue is empty; returns ticks consumed.
+        Raises ``IngestDrainExhausted`` if ops remain after
+        ``max_ticks`` — a silent partial drain would let callers
+        mistake a clipped queue for a fully landed one."""
         n = 0
         while self._ops and n < max_ticks:
             self.tick()
             n += 1
+        if self._ops:
+            raise IngestDrainExhausted(
+                f"drain stopped after {n} ticks with "
+                f"{self.pending_ops} ops ({self.pending_docs} docs) "
+                f"still queued")
         return n
 
     # -- reporting -----------------------------------------------------

@@ -46,6 +46,7 @@ class LifecyclePolicy:
         return cls(skew_threshold=cfg.reshard_skew_threshold,
                    tombstone_threshold=cfg.reshard_tombstone_threshold,
                    min_rows=cfg.reshard_min_rows,
+                   growth_factor=cfg.reshard_growth_factor,
                    max_shards=cfg.reshard_max_shards)
 
     def decide(self, store) -> Optional[ReshardPlan]:

@@ -1,5 +1,8 @@
-"""Serving: batched decode engine + RAG pipeline."""
+"""Serving: batched decode engine + RAG pipeline + live harness."""
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.live_harness import LiveHarness, LiveSchedule, \
+    Phase, make_schedule
 from repro.serving.rag_pipeline import RAGPipeline
 
-__all__ = ["Engine", "EngineConfig", "RAGPipeline"]
+__all__ = ["Engine", "EngineConfig", "LiveHarness", "LiveSchedule",
+           "Phase", "RAGPipeline", "make_schedule"]

@@ -34,6 +34,9 @@ class RAGAnswer:
     context: str
     n_context_tokens: int
     hits: int
+    # store epoch the retrieval was served from — the live harness
+    # asserts old-epoch serving through the pipeline mid-migration
+    epoch: int = 0
 
 
 class ExtractiveReader:
@@ -142,6 +145,30 @@ class RAGPipeline:
             ingest["service"] = self.ingest.report()
         if ingest:
             report["ingest"] = ingest
+        # per-subsystem launch accounting (live-serving harness): how
+        # many times each backend was actually dispatched — embedder
+        # encode calls, summarizer materializations, retrieval sweep
+        # rounds, store maintenance turns, and (with an LM reader)
+        # engine prefill/decode launches
+        launches = {
+            "retrieval_rounds": self.rag.stats["retrieval_rounds"],
+            "store": {"refreshes": store.stats.refreshes,
+                      "compactions": store.stats.compactions,
+                      "reshard_steps": store.stats.reshard_steps,
+                      "quantized_scans": store.stats.quantized_scans}}
+        emb_stats = getattr(self.rag.graph.embedder, "stats", None)
+        if emb_stats is not None:
+            launches["embedder"] = dict(emb_stats)
+        launches["summarizer"] = dict(self.rag.graph.stats)
+        if self.engine is not None:
+            launches["engine"] = {
+                "prefill_launches":
+                    self.engine.stats["prefill_launches"],
+                "decode_launches":
+                    self.engine.stats["decode_launches"],
+                "generate_batches":
+                    self.engine.stats["generate_batches"]}
+        report["launches"] = launches
         if report["quantized_scan"]:
             report["coarse_mult"] = store.coarse_mult
             report["scan_bits"] = store.scan_bits
@@ -232,7 +259,8 @@ class RAGPipeline:
                      for q, r in zip(questions, rets)]
         return [RAGAnswer(answer=t, context=r.context,
                           n_context_tokens=r.n_tokens,
-                          hits=len(r.hits))
+                          hits=len(r.hits),
+                          epoch=getattr(r, "epoch", 0))
                 for t, r in zip(texts, rets)]
 
     def answer(self, question: str, mode: str = "collapsed"
@@ -248,7 +276,8 @@ class RAGPipeline:
                 if self.engine is not None
                 else self.reader.answer(question, r.context))
         return RAGAnswer(answer=text, context=r.context,
-                         n_context_tokens=r.n_tokens, hits=len(r.hits))
+                         n_context_tokens=r.n_tokens, hits=len(r.hits),
+                         epoch=getattr(r, "epoch", 0))
 
     def answer_batch(self, questions: Sequence[str],
                      mode: str = "collapsed") -> List[RAGAnswer]:
@@ -282,7 +311,8 @@ class RAGPipeline:
             for i, r, text in zip(plain, rets, texts):
                 out[i] = RAGAnswer(answer=text, context=r.context,
                                    n_context_tokens=r.n_tokens,
-                                   hits=len(r.hits))
+                                   hits=len(r.hits),
+                                   epoch=getattr(r, "epoch", 0))
         if hop:
             for i, ans in zip(hop, self._multihop(
                     [questions[i] for i in hop], batched=True)):

@@ -22,7 +22,8 @@ from repro.core.graph import EraGraph
 from repro.core.summarize import LMSummarizer, SummaryCache
 from repro.data.pipeline import Prefetcher, synthetic_lm_batches
 from repro.embed.hashing import HashingEmbedder
-from repro.ingest import IngestQueueFull, IngestService
+from repro.ingest import IngestDrainExhausted, IngestQueueFull, \
+    IngestService
 from repro.serving.rag_pipeline import RAGPipeline
 
 pytestmark = pytest.mark.ingest
@@ -137,6 +138,62 @@ def test_ingest_queue_bound_backpressure():
     svc.drain()
     svc.submit("dx", "now there is room again.")   # drained -> accepts
     assert svc.pending_docs == 1
+
+
+def test_ingest_knob_zero_rejected_not_defaulted():
+    """Regression: explicit 0 / negative ctor knobs used to fall back
+    to the config default through `int(x or default)` — the same
+    falsy-fallback class as submit(max_new_tokens=0)."""
+    live = _rag()
+    for kw in ({"max_pending_docs": 0}, {"docs_per_tick": 0},
+               {"embed_batch": 0}, {"max_pending_ops": 0},
+               {"docs_per_tick": -2}):
+        with pytest.raises(ValueError):
+            IngestService(live, **kw)
+    # None still means "use the config default"
+    svc = IngestService(live)
+    assert svc.max_pending_docs == CFG.ingest_max_pending_docs
+    assert svc.docs_per_tick == CFG.ingest_docs_per_tick
+    assert svc.embed_batch == CFG.ingest_embed_batch
+    assert svc.max_pending_ops == CFG.ingest_max_pending_ops
+
+
+def test_ingest_config_validates_pending_ops():
+    import dataclasses
+    with pytest.raises(ValueError):
+        dataclasses.replace(CFG, ingest_max_pending_ops=0)
+
+
+def test_remove_backpressure_bounds_op_queue():
+    """Regression: removals bypassed backpressure — pending_docs only
+    counts insert docs, so alternating submit/remove grew `_ops`
+    without IngestQueueFull ever firing."""
+    live = _rag()
+    svc = IngestService(live, max_pending_ops=4)
+    with pytest.raises(IngestQueueFull):
+        for i in range(3 * 4):
+            svc.submit(f"bp{i}", f"text for doc {i}.")
+            svc.remove([f"bp{i}"])
+    assert svc.pending_ops <= 4
+    svc.drain()
+    svc.remove(["bp0"])                 # drained -> accepts again
+    assert svc.pending_ops == 1
+
+
+def test_drain_exhaustion_raises_not_silent():
+    """Regression: drain(max_ticks) used to return silently with work
+    still queued — a clipped drain looked exactly like a full one."""
+    live = _rag()
+    svc = IngestService(live, docs_per_tick=1, embed_batch=1)
+    svc.submit_many(_docs(5))
+    with pytest.raises(IngestDrainExhausted):
+        svc.drain(max_ticks=2)
+    assert not svc.idle                 # work really is still queued
+    n = svc.drain()                     # unbounded drain finishes
+    assert n > 0 and svc.idle
+    twin = _rag()
+    twin.insert_docs(_docs(5))
+    _assert_same_graph(live.graph, twin.graph)
 
 
 def test_remove_docs_is_idempotent_and_complete():

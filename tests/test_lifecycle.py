@@ -331,6 +331,63 @@ def test_config_thresholds_attach_policy():
         EraRAGConfig(reshard_skew_threshold=-1.0)
 
 
+def test_config_plumbs_growth_factor():
+    """Regression: ``from_config`` dropped ``growth_factor`` — a
+    config asking for 4x growth silently migrated 2x."""
+    cfg = EraRAGConfig(**{**vars(CFG), "index_shards": 2,
+                          "reshard_skew_threshold": 1e-6,
+                          "reshard_min_rows": 10,
+                          "reshard_growth_factor": 4})
+    policy = LifecyclePolicy.from_config(cfg)
+    assert policy.growth_factor == 4
+    rag = EraRAG(cfg, _EMB)
+    docs = [(f"doc{i}", f"Document {i} about " +
+             " ".join(_WORDS[(i + j) % len(_WORDS)]
+                      for j in range(20)))
+            for i in range(10)]
+    rag.insert_docs(docs)
+    rag.store.refresh()
+    assert rag.store.migration is not None
+    assert rag.store.migration.plan.n_to == 8      # 2 * 4, not 2 * 2
+    while rag.store.epoch == 0:
+        rag.store.refresh()
+    assert rag.store.n_shards == 8
+    _assert_matches_fresh(rag.store, rag.graph, _queries(72), 8)
+    with pytest.raises(ValueError):
+        EraRAGConfig(reshard_growth_factor=1)
+
+
+def test_skew_trigger_at_max_shards_falls_through_to_tombstone():
+    """At n == max_shards the skew branch must yield — a triggered
+    tombstone compaction still runs (same-width replay), and with the
+    tombstone trigger off the policy stands down entirely."""
+    g = EraGraph(CFG, _EMB)
+    # per-shard compaction off so tombstones pile up for the trigger
+    store = ShardedVectorStore(g, n_shards=2, compact_threshold=1.0)
+    chunks = _mk_chunks(55, 40)
+    for i in range(0, len(chunks), 8):    # staged: summary churn
+        g.insert_chunks(chunks[i:i + 8])
+        store.refresh()
+    assert sum(sh.n_dead for sh in store._shards) > 0
+    skew = ShardLoadReport.from_store(store).skew
+    both = LifecyclePolicy(skew_threshold=1e-6,
+                           tombstone_threshold=0.01,
+                           min_rows=10, max_shards=2)
+    assert skew > both.skew_threshold      # skew WOULD trigger...
+    plan = both.decide(store)
+    assert plan is not None                # ...but falls through
+    assert plan.n_from == plan.n_to == 2
+    assert "tombstone" in plan.reason
+    skew_only = LifecyclePolicy(skew_threshold=1e-6, min_rows=10,
+                                max_shards=2)
+    assert skew_only.decide(store) is None
+    # below the ceiling the same skew policy does grow
+    roomy = LifecyclePolicy(skew_threshold=1e-6, min_rows=10,
+                            max_shards=8, growth_factor=3)
+    grow = roomy.decide(store)
+    assert grow is not None and grow.n_to == 6     # 2 * 3
+
+
 # ----------------------------------------------------------------------
 # from_state: snapshot / config shard-count disagreement
 # ----------------------------------------------------------------------
