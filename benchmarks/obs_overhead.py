@@ -1,0 +1,149 @@
+"""Observability overhead gate: tracing must be near-free, off must be FREE.
+
+Builds two pipelines over the same corpus — obs disabled (the default
+counters-only config) and obs fully enabled (``obs_trace=True``) —
+and drives the identical live-serving query phase through both:
+repeated Zipf-free full sweeps of the question pool in fixed batches,
+interleaved rep-by-rep so machine drift hits both sides equally.
+Per-system time is the **min over reps** (the classic noise-free
+estimate), and the gate is the enabled-vs-disabled QPS ratio.
+
+Hard gates (AssertionError -> nonzero exit via run.py):
+
+- bitwise answer parity: the traced pipeline returns exactly the
+  untraced pipeline's answers/contexts/hits — observability reads,
+  never steers;
+- zero spans with obs off (the ``NULL_TRACER`` path records nothing);
+- schema drift: every numeric key in both ``index_report()`` variants
+  is declared in ``obs.schema.INDEX_REPORT_SCHEMA``;
+- ``overhead_ratio = t_on / t_off <= ceiling`` (1.10 = the <=10%
+  QPS overhead budget from the issue).
+
+Results go to ``BENCH_obs.json``: QPS for both sides, the ratio, span
+counts, trace-export volume, and the Prometheus exposition size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import List
+
+from benchmarks.common import BENCH_CFG, bench_corpus, csv_row, \
+    make_embedder
+from repro.core.erarag import EraRAG
+from repro.obs.schema import undeclared
+from repro.obs.trace import NULL_TRACER
+from repro.serving.rag_pipeline import RAGPipeline
+
+
+def _build(cfg, corpus) -> RAGPipeline:
+    rag = EraRAG(cfg, make_embedder(cfg))
+    rag.insert_docs(corpus.docs)
+    rag.store.refresh()
+    return RAGPipeline(rag)
+
+
+def _batches(corpus, query_batch: int) -> List[List[str]]:
+    qs = [qa.question for qa in corpus.qa if qa.kind != "multihop"]
+    return [qs[i:i + query_batch]
+            for i in range(0, len(qs), query_batch)]
+
+
+def _sweep(pipe: RAGPipeline, batches: List[List[str]]) -> float:
+    t0 = time.perf_counter()
+    for b in batches:
+        pipe.answer_batch(b)
+    return time.perf_counter() - t0
+
+
+def run(n_docs: int = 40, query_batch: int = 4, reps: int = 5,
+        overhead_ceiling: float = 1.10,
+        out_json: str | None = "BENCH_obs.json") -> List[str]:
+    corpus = bench_corpus(n_docs=n_docs)
+    cfg_off = BENCH_CFG
+    cfg_on = dataclasses.replace(BENCH_CFG, obs_trace=True)
+    pipe_off = _build(cfg_off, corpus)
+    pipe_on = _build(cfg_on, corpus)
+    batches = _batches(corpus, query_batch)
+    n_queries = sum(len(b) for b in batches)
+
+    # answers must be bitwise independent of observability — compare
+    # the full tuple stream, not a summary
+    ans_off = [(a.answer, a.context, a.hits, a.epoch)
+               for b in batches for a in pipe_off.answer_batch(b)]
+    ans_on = [(a.answer, a.context, a.hits, a.epoch)
+              for b in batches for a in pipe_on.answer_batch(b)]
+    assert ans_off == ans_on, \
+        "enabling obs_trace changed serving answers"
+    assert pipe_off.rag.obs.tracer is NULL_TRACER \
+        and pipe_off.rag.obs.tracer.total_spans == 0, \
+        "obs-off pipeline recorded spans"
+    spans_warm = pipe_on.rag.obs.tracer.total_spans
+    assert spans_warm > 0, "obs-on pipeline recorded no spans"
+    drift = undeclared(pipe_off.index_report()) \
+        + undeclared(pipe_on.index_report())
+    assert not drift, f"index_report keys missing from schema: {drift}"
+
+    # interleaved timed sweeps (off/on, then on/off so a monotone
+    # machine slowdown cannot systematically favor one side);
+    # min-over-reps per side
+    ts_off: List[float] = []
+    ts_on: List[float] = []
+    for _ in range(reps):
+        ts_off.append(_sweep(pipe_off, batches))
+        ts_on.append(_sweep(pipe_on, batches))
+    for _ in range(max(1, reps // 2)):
+        ts_on.append(_sweep(pipe_on, batches))
+        ts_off.append(_sweep(pipe_off, batches))
+    t_off, t_on = min(ts_off), min(ts_on)
+    ratio = t_on / max(t_off, 1e-12)
+    assert ratio <= overhead_ceiling, \
+        (f"tracing overhead {100 * (ratio - 1):.1f}% exceeds the "
+         f"{100 * (overhead_ceiling - 1):.0f}% budget "
+         f"(t_on={t_on * 1e3:.2f}ms t_off={t_off * 1e3:.2f}ms)")
+
+    tr = pipe_on.rag.obs.tracer
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.jsonl")
+        exported = tr.export_jsonl(path)
+        jsonl_bytes = os.path.getsize(path)
+    prom = pipe_on.rag.obs.registry.to_prometheus()
+
+    report = {
+        "n_docs": n_docs, "n_queries": n_queries,
+        "query_batch": query_batch, "reps": reps,
+        "qps_off": n_queries / max(t_off, 1e-12),
+        "qps_on": n_queries / max(t_on, 1e-12),
+        "overhead_ratio": ratio, "ceiling": overhead_ceiling,
+        "spans_recorded": tr.total_spans,
+        "spans_dropped": tr.dropped,
+        "spans_exported": exported,
+        "trace_jsonl_bytes": jsonl_bytes,
+        "prometheus_lines": prom.count("\n"),
+        "parity": {"bitwise": True, "answers": len(ans_off)},
+        "schema_drift": [],
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+            f.write("\n")
+
+    return [
+        csv_row("obs_overhead/query_phase",
+                1e6 * t_on / max(1, n_queries),
+                f"ratio={ratio:.3f};qps_off={report['qps_off']:.0f};"
+                f"qps_on={report['qps_on']:.0f}"),
+        csv_row("obs_overhead/trace",
+                0.0,
+                f"spans={tr.total_spans};exported={exported};"
+                f"prom_lines={report['prometheus_lines']};"
+                f"parity=bitwise"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -313,6 +313,13 @@ class EraRAGConfig:
     # per-document count: removals carry no docs, so a doc-only bound
     # lets alternating submit/remove grow the op queue without limit
     ingest_max_pending_ops: int = 4096
+    # observability (repro.obs): counters and the metrics registry are
+    # always live (near-zero cost); obs_trace additionally records
+    # nested per-query/ingest/lifecycle spans on the pipeline's Tracer
+    # (bounded at obs_max_spans retained spans, overflow counted).
+    # False keeps the NULL_TRACER no-op path — bitwise inert.
+    obs_trace: bool = False
+    obs_max_spans: int = 8192
 
     def __post_init__(self):
         if not (0 < self.s_min <= self.s_max):
@@ -351,6 +358,8 @@ class EraRAGConfig:
                 or self.ingest_embed_batch < 1 \
                 or self.ingest_max_pending_ops < 1:
             raise ValueError("ingest_* settings must be >= 1")
+        if self.obs_max_spans < 1:
+            raise ValueError("obs_max_spans must be >= 1")
 
     def scaled_bounds(self, scale: float) -> "EraRAGConfig":
         """Tab V ablation: scale tolerance delta around the mean size."""

@@ -1,13 +1,13 @@
 """Small shared utilities: PRNG discipline, pytree helpers, timers."""
 from __future__ import annotations
 
-import contextlib
-import time
-from typing import Any, Dict, Iterator, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.timers import timed_block
 
 
 def key_for(seed: int, *path: Any) -> jax.Array:
@@ -41,11 +41,10 @@ def cast_tree(tree: Any, dtype) -> Any:
         else x, tree)
 
 
-@contextlib.contextmanager
-def timed(store: Dict[str, float], name: str) -> Iterator[None]:
-    t0 = time.perf_counter()
-    yield
-    store[name] = store.get(name, 0.0) + time.perf_counter() - t0
+def timed(store: Dict[str, float], name: str):
+    """Accumulating timer; delegates to the obs timer helper so every
+    duration in the repo reads the same injectable clock."""
+    return timed_block(store, name)
 
 
 def human_bytes(n: float) -> str:

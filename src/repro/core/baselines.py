@@ -15,7 +15,6 @@ accounting so Figs 2/4/6 and Table II comparisons are apples-to-apples.
 from __future__ import annotations
 
 import math
-import time
 from collections import Counter, defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -31,6 +30,7 @@ from repro.core.summarize import ExtractiveSummarizer, Summarizer
 from repro.data.chunker import Chunk, chunk_corpus
 from repro.data.tokenizer import HashTokenizer
 from repro.kernels.mips_topk.ops import mips_topk
+from repro.obs.timers import timed_block
 
 
 class _Base:
@@ -82,17 +82,17 @@ class VanillaRAG(_Base):
         docs = list(docs)
         self.docs.extend(docs)
         rep = UpdateReport()
-        t0 = time.perf_counter()
-        new = chunk_corpus(docs, self.tokenizer, self.cfg.chunk_tokens)
-        new = [c for c in new
-               if c.chunk_id not in {x.chunk_id for x in self.chunks}]
-        rep.n_new_chunks = len(new)
-        if new:
-            embs = self.embedder.encode([c.text for c in new])
-            self.chunks.extend(new)
-            self._embs = embs if self._embs is None else \
-                np.concatenate([self._embs, embs])
-        rep.time_embed = time.perf_counter() - t0
+        with timed_block(rep, "time_embed"):
+            new = chunk_corpus(docs, self.tokenizer,
+                               self.cfg.chunk_tokens)
+            new = [c for c in new if c.chunk_id
+                   not in {x.chunk_id for x in self.chunks}]
+            rep.n_new_chunks = len(new)
+            if new:
+                embs = self.embedder.encode([c.text for c in new])
+                self.chunks.extend(new)
+                self._embs = embs if self._embs is None else \
+                    np.concatenate([self._embs, embs])
         self.reports.append(rep)
         return rep
 
@@ -126,21 +126,22 @@ class BM25(_Base):
         docs = list(docs)
         self.docs.extend(docs)
         rep = UpdateReport()
-        t0 = time.perf_counter()
-        new = chunk_corpus(docs, self.tokenizer, self.cfg.chunk_tokens)
-        seen = {c.chunk_id for c in self.chunks}
-        for c in new:
-            if c.chunk_id in seen:
-                continue
-            toks = [t.lower() for t in self.tokenizer.tokenize(c.text)]
-            tf = Counter(toks)
-            self.chunks.append(c)
-            self.tf.append(tf)
-            self.lens.append(len(toks))
-            for term in tf:
-                self.df[term] += 1
-        rep.n_new_chunks = len(new)
-        rep.time_partition = time.perf_counter() - t0  # index time
+        with timed_block(rep, "time_partition"):  # index time
+            new = chunk_corpus(docs, self.tokenizer,
+                               self.cfg.chunk_tokens)
+            seen = {c.chunk_id for c in self.chunks}
+            for c in new:
+                if c.chunk_id in seen:
+                    continue
+                toks = [t.lower()
+                        for t in self.tokenizer.tokenize(c.text)]
+                tf = Counter(toks)
+                self.chunks.append(c)
+                self.tf.append(tf)
+                self.lens.append(len(toks))
+                for term in tf:
+                    self.df[term] += 1
+            rep.n_new_chunks = len(new)
         self.reports.append(rep)
         return rep
 
@@ -206,28 +207,26 @@ class RaptorLike(_Base):
                               self.cfg.chunk_tokens)
         texts = [c.text for c in chunks]
         ids = [c.chunk_id for c in chunks]
-        t0 = time.perf_counter()
-        embs = self.embedder.encode(texts) if texts else \
-            np.zeros((0, self.cfg.embed_dim), np.float32)
-        rep.time_embed += time.perf_counter() - t0
+        with timed_block(rep, "time_embed"):
+            embs = self.embedder.encode(texts) if texts else \
+                np.zeros((0, self.cfg.embed_dim), np.float32)
         level = 0
         cur_texts, cur_embs = list(texts), embs
         target = (self.cfg.s_min + self.cfg.s_max) / 2
         while len(cur_texts) > self.cfg.s_max and \
                 level < self.cfg.max_layers:
-            t0 = time.perf_counter()
-            n_clusters = max(1, int(round(len(cur_texts) / target)))
-            assign = _kmeans(cur_embs, n_clusters, seed=level)
-            rep.time_partition += time.perf_counter() - t0
+            with timed_block(rep, "time_partition"):
+                n_clusters = max(1,
+                                 int(round(len(cur_texts) / target)))
+                assign = _kmeans(cur_embs, n_clusters, seed=level)
             nxt_texts: List[str] = []
             for c in range(assign.max() + 1):
                 members = [cur_texts[i] for i in
                            np.nonzero(assign == c)[0]]
                 if not members:
                     continue
-                t0 = time.perf_counter()
-                res = self.summarizer.summarize(members)
-                rep.time_summarize += time.perf_counter() - t0
+                with timed_block(rep, "time_summarize"):
+                    res = self.summarizer.summarize(members)
                 rep.tokens_in += res.tokens_in
                 rep.tokens_out += res.tokens_out
                 rep.n_resummarized += 1
@@ -235,17 +234,16 @@ class RaptorLike(_Base):
             texts.extend(nxt_texts)
             ids.extend(f"sum-{level}-{i}"
                        for i in range(len(nxt_texts)))
-            t0 = time.perf_counter()
-            cur_embs = self.embedder.encode(nxt_texts) if nxt_texts \
-                else np.zeros((0, self.cfg.embed_dim), np.float32)
-            rep.time_embed += time.perf_counter() - t0
+            with timed_block(rep, "time_embed"):
+                cur_embs = self.embedder.encode(nxt_texts) \
+                    if nxt_texts \
+                    else np.zeros((0, self.cfg.embed_dim), np.float32)
             cur_texts = nxt_texts
             level += 1
         self.texts, self.ids = texts, ids
-        t0 = time.perf_counter()
-        self._embs = self.embedder.encode(texts) if texts else \
-            np.zeros((0, self.cfg.embed_dim), np.float32)
-        rep.time_embed += time.perf_counter() - t0
+        with timed_block(rep, "time_embed"):
+            self._embs = self.embedder.encode(texts) if texts else \
+                np.zeros((0, self.cfg.embed_dim), np.float32)
 
     def insert_docs(self, docs: Iterable[Tuple[str, str]]) -> UpdateReport:
         self.docs.extend(list(docs))
@@ -318,28 +316,24 @@ class GraphRAGLike(RaptorLike):
         # which the paper contrasts against: 'GraphRAG performs full
         # re-clustering after each update').  tokens_in = chunk text,
         # tokens_out ~ extracted triple list.
-        t0 = time.perf_counter()
-        for c in chunks:
-            rep.tokens_in += c.n_tokens
-            rep.tokens_out += max(8, c.n_tokens // 4)
-        rep.time_summarize += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        comms = self._communities(chunks)
-        rep.time_partition += time.perf_counter() - t0
+        with timed_block(rep, "time_summarize"):
+            for c in chunks:
+                rep.tokens_in += c.n_tokens
+                rep.tokens_out += max(8, c.n_tokens // 4)
+        with timed_block(rep, "time_partition"):
+            comms = self._communities(chunks)
         for ci, members in enumerate(comms):
             if len(members) < 2:
                 continue
-            t0 = time.perf_counter()
-            res = self.summarizer.summarize(
-                [texts[i] for i in members])
-            rep.time_summarize += time.perf_counter() - t0
+            with timed_block(rep, "time_summarize"):
+                res = self.summarizer.summarize(
+                    [texts[i] for i in members])
             rep.tokens_in += res.tokens_in
             rep.tokens_out += res.tokens_out
             rep.n_resummarized += 1
             texts.append(res.text)
             ids.append(f"comm-{ci}")
         self.texts, self.ids = texts, ids
-        t0 = time.perf_counter()
-        self._embs = self.embedder.encode(texts) if texts else \
-            np.zeros((0, self.cfg.embed_dim), np.float32)
-        rep.time_embed += time.perf_counter() - t0
+        with timed_block(rep, "time_embed"):
+            self._embs = self.embedder.encode(texts) if texts else \
+                np.zeros((0, self.cfg.embed_dim), np.float32)

@@ -24,6 +24,7 @@ from repro.core.store import AnyStore, ShardedVectorStore, \
 from repro.core.summarize import Summarizer
 from repro.data.chunker import chunk_corpus
 from repro.data.tokenizer import HashTokenizer
+from repro.obs import Observability
 
 
 def _quant_kw(cfg: EraRAGConfig) -> dict:
@@ -56,8 +57,14 @@ class EraRAG:
         self.embedder = embedder
         self.mesh = mesh
         self.tokenizer = HashTokenizer()
+        # per-pipeline observability: a private metrics registry (the
+        # backing of RAGPipeline.index_report()) plus the span tracer
+        # (NULL_TRACER unless cfg.obs_trace — the inert no-op path)
+        self.obs = Observability(cfg.obs_trace, cfg.obs_max_spans)
         self.graph = EraGraph(cfg, embedder, summarizer, self.tokenizer)
+        self.graph.tracer = self.obs.tracer
         self.store = make_store(self.graph, cfg, mesh)
+        self.store.tracer = self.obs.tracer
         self._attach_lifecycle()
         self.reports: List[UpdateReport] = []
         # batched-retrieval-round counter: every batched store sweep
@@ -99,6 +106,7 @@ class EraRAG:
                               collective=self.cfg.collective_query,
                               **_quant_kw(self.cfg))
         self.store = resharder.reshard(self.store, n_shards)
+        self.store.tracer = self.obs.tracer  # store may be a NEW object
         self.cfg = dataclasses.replace(self.cfg,
                                        index_shards=int(n_shards))
         self._attach_lifecycle()
@@ -159,33 +167,42 @@ class EraRAG:
         texts = list(texts)
         if not texts:
             return []
-        if mode == "multihop":
-            rets = multihop_search_batch(
-                self.graph, self.store, self.embedder.encode, texts, k,
-                self.cfg.token_budget, self.cfg.retrieval_bias_p,
-                bridge_fn=bridge_fn, tokenizer=self.tokenizer)
-            self.stats["retrieval_rounds"] += \
-                1 + int(any(r.hops == 2 for r in rets))
-            return rets
-        q = np.asarray(self.embedder.encode(texts))
-        if self.query_cache is None:
-            self.stats["retrieval_rounds"] += 1
-            return self._search(q, k, mode)
-        # semantic cache front: per-query exact/cosine lookup under the
-        # current store token; only the misses form a (single) store
-        # sweep, and every fresh result is cached under the same token
-        token = self.store.cache_token
-        key = (k, mode, self.cfg.token_budget,
-               self.cfg.retrieval_bias_p)
-        out = self.query_cache.lookup_batch(token, key, q)
-        miss = [i for i, r in enumerate(out) if r is None]
-        if miss:
-            self.stats["retrieval_rounds"] += 1
-            fresh = self._search(q[np.asarray(miss)], k, mode)
-            for i, r in zip(miss, fresh):
-                self.query_cache.put(token, key, q[i], r)
-                out[i] = r
-        return out
+        tr = self.obs.tracer
+        with tr.span("retrieve", n=len(texts), mode=mode,
+                     epoch=self.store.epoch):
+            if mode == "multihop":
+                rets = multihop_search_batch(
+                    self.graph, self.store, self.embedder.encode,
+                    texts, k, self.cfg.token_budget,
+                    self.cfg.retrieval_bias_p,
+                    bridge_fn=bridge_fn, tokenizer=self.tokenizer)
+                self.stats["retrieval_rounds"] += \
+                    1 + int(any(r.hops == 2 for r in rets))
+                return rets
+            with tr.span("embed", n=len(texts)):
+                q = np.asarray(self.embedder.encode(texts))
+            if self.query_cache is None:
+                self.stats["retrieval_rounds"] += 1
+                return self._search(q, k, mode)
+            # semantic cache front: per-query exact/cosine lookup
+            # under the current store token; only the misses form a
+            # (single) store sweep, and every fresh result is cached
+            # under the same token
+            token = self.store.cache_token
+            key = (k, mode, self.cfg.token_budget,
+                   self.cfg.retrieval_bias_p)
+            with tr.span("cache_lookup", n=len(texts)) as sp:
+                out = self.query_cache.lookup_batch(token, key, q)
+                miss = [i for i, r in enumerate(out) if r is None]
+                if sp is not None:
+                    sp.attrs["misses"] = len(miss)
+            if miss:
+                self.stats["retrieval_rounds"] += 1
+                fresh = self._search(q[np.asarray(miss)], k, mode)
+                for i, r in zip(miss, fresh):
+                    self.query_cache.put(token, key, q[i], r)
+                    out[i] = r
+            return out
 
     def _search(self, q: np.ndarray, k: int, mode: str
                 ) -> List[Retrieval]:
@@ -226,6 +243,7 @@ class EraRAG:
         cfg = EraRAGConfig(**state["cfg"])
         obj = cls(cfg, embedder, summarizer, mesh=mesh)
         obj.graph = EraGraph.from_state(state, embedder, summarizer)
+        obj.graph.tracer = obj.obs.tracer
         if "store" in state:
             # cfg.index_shards is the desired layout (0 = auto keeps
             # the snapshot's); a disagreement with the snapshot routes
@@ -238,5 +256,6 @@ class EraRAG:
                                          **_quant_kw(cfg))
         else:
             obj.store = make_store(obj.graph, cfg, mesh)
+        obj.store.tracer = obj.obs.tracer
         obj._attach_lifecycle()
         return obj

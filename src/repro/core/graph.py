@@ -26,13 +26,14 @@ paper's order-of-magnitude update savings.
 from __future__ import annotations
 
 import hashlib
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.common.config import EraRAGConfig
+from repro.obs.timers import timed_block
+from repro.obs.trace import NULL_TRACER
 from repro.core.lsh import HyperplaneLSH
 from repro.core.partition import partition_items, sort_items
 from repro.core.summarize import ExtractiveSummarizer, SummaryCache, \
@@ -112,6 +113,11 @@ def _node_id(layer: int, children: Sequence[str], text: str) -> str:
 
 
 class EraGraph:
+    # span recorder for the update path; the owning EraRAG swaps in
+    # its Observability tracer (the UpdateReport ``time_*`` fields and
+    # the spans share one timed_block, so they can never drift apart)
+    tracer = NULL_TRACER
+
     def __init__(self, cfg: EraRAGConfig, embedder,
                  summarizer: Optional[Summarizer] = None,
                  tokenizer: Optional[HashTokenizer] = None):
@@ -183,12 +189,13 @@ class EraGraph:
         pre = dict(precomputed) if precomputed else {}
         need = [c for c in fresh if c.chunk_id not in pre]
         if need:
-            t0 = time.perf_counter()
-            embs_new = self.embedder.encode([c.text for c in need])
-            report.time_embed += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            keys_new = self.lsh.hash_ints(embs_new)
-            report.time_hash += time.perf_counter() - t0
+            with timed_block(report, "time_embed", self.tracer,
+                             "embed", n=len(need)):
+                embs_new = self.embedder.encode(
+                    [c.text for c in need])
+            with timed_block(report, "time_hash", self.tracer,
+                             "hash", n=len(need)):
+                keys_new = self.lsh.hash_ints(embs_new)
             for c, e, k in zip(need, embs_new, keys_new):
                 pre[c.chunk_id] = (e, int(k))
 
@@ -318,50 +325,51 @@ class EraGraph:
         digests: List[str] = []
         miss: List[int] = []
         cache = self.summary_cache
-        t0 = time.perf_counter()
-        for i, members in enumerate(jobs):
-            if cache is None:
-                miss.append(i)
-                continue
-            digest = SummaryCache.digest(layer + 1, members)
-            digests.append(digest)
-            hit = cache.get(digest)
-            if hit is None:
-                miss.append(i)
-                continue
-            saved = sum(self.tokenizer.count(t) for t in texts[i])
-            cache.stats.tokens_saved += saved
-            report.summary_cache_hits += 1
-            report.summary_tokens_saved += saved
-            results[i] = SummaryResult(hit, 0, 0)
-        if miss:
-            batch = [texts[i] for i in miss]
-            if self.cfg.batch_summaries and \
-                    hasattr(self.summarizer, "summarize_batch"):
-                outs = self.summarizer.summarize_batch(batch)
-                self.stats["summarize_launches"] += 1
-            else:
-                outs = [self.summarizer.summarize(t) for t in batch]
-                self.stats["summarize_launches"] += len(batch)
-            self.stats["segments_summarized"] += len(batch)
-            for i, res in zip(miss, outs):
-                results[i] = res
-                if cache is not None:
-                    cache.put(digests[i], res.text)
-        report.time_summarize += time.perf_counter() - t0
+        with timed_block(report, "time_summarize", self.tracer,
+                         "summarize", layer=layer, jobs=len(jobs)):
+            for i, members in enumerate(jobs):
+                if cache is None:
+                    miss.append(i)
+                    continue
+                digest = SummaryCache.digest(layer + 1, members)
+                digests.append(digest)
+                hit = cache.get(digest)
+                if hit is None:
+                    miss.append(i)
+                    continue
+                saved = sum(self.tokenizer.count(t) for t in texts[i])
+                cache.stats.tokens_saved += saved
+                report.summary_cache_hits += 1
+                report.summary_tokens_saved += saved
+                results[i] = SummaryResult(hit, 0, 0)
+            if miss:
+                batch = [texts[i] for i in miss]
+                if self.cfg.batch_summaries and \
+                        hasattr(self.summarizer, "summarize_batch"):
+                    outs = self.summarizer.summarize_batch(batch)
+                    self.stats["summarize_launches"] += 1
+                else:
+                    outs = [self.summarizer.summarize(t)
+                            for t in batch]
+                    self.stats["summarize_launches"] += len(batch)
+                self.stats["segments_summarized"] += len(batch)
+                for i, res in zip(miss, outs):
+                    results[i] = res
+                    if cache is not None:
+                        cache.put(digests[i], res.text)
         for i in miss:
             report.tokens_in += results[i].tokens_in
             report.tokens_out += results[i].tokens_out
         report.n_resummarized += len(jobs)
 
-        t0 = time.perf_counter()
-        embs = np.asarray(
-            self.embedder.encode([r.text for r in results]),
-            dtype=np.float32)
-        report.time_embed += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        keys = self.lsh.hash_ints(embs)
-        report.time_hash += time.perf_counter() - t0
+        with timed_block(report, "time_embed", self.tracer, "embed",
+                         n=len(results)):
+            embs = np.asarray(
+                self.embedder.encode([r.text for r in results]),
+                dtype=np.float32)
+        with timed_block(report, "time_hash", self.tracer, "hash",
+                         n=len(results)):
+            keys = self.lsh.hash_ints(embs)
 
         parents: List[str] = []
         for members, res, emb, key in zip(jobs, results, embs, keys):
@@ -440,43 +448,48 @@ class EraGraph:
         # merge-with-adjacent rule).  Joint re-splitting of merely-
         # adjacent affected segments would shift their boundaries and
         # re-summarize segments that didn't need it.
-        t0 = time.perf_counter()
-        regions: List[Tuple[int, int]] = []
-        for idx in sorted(affected):
-            size = len(updated[idx]) if idx in updated \
-                else len(segs[idx].members)
-            lo = hi = idx
-            if size < self.cfg.s_min:
-                lo, hi = self._extend_group(layer, idx, idx, updated)
-            regions.append((lo, hi))
-        groups = self._merge_intervals(regions)
         added_parents: List[str] = []
         removed_parents: List[str] = []
-        # pass 1 — plan right-to-left (the splice order): decide every
-        # group's partition before any mutation and collect the member
-        # tuples that need a fresh summary, in node-creation order
         plan: List[Tuple[int, int, List, Dict, Set[str]]] = []
         jobs: List[Tuple[str, ...]] = []
-        for lo, hi in reversed(groups):
-            items = []
-            for idx in range(lo, hi + 1):
-                cur = updated[idx] if idx in updated \
-                    else segs[idx].members
-                for nid in cur:
-                    items.append((self.nodes[nid].key, nid))
-            parts = partition_items(items, self.cfg.s_min,
-                                    self.cfg.s_max)
-            report.n_affected_segments += hi - lo + 1
-            old_by_members = {segs[i].members: segs[i]
-                              for i in range(lo, hi + 1)}
-            old_parents = {segs[i].parent for i in range(lo, hi + 1)
-                           if segs[i].parent}
-            for part in parts:
-                members = tuple(nid for _, nid in part)
-                if members not in old_by_members:
-                    jobs.append(members)
-            plan.append((lo, hi, parts, old_by_members, old_parents))
-        report.time_partition += time.perf_counter() - t0
+        with timed_block(report, "time_partition", self.tracer,
+                         "partition", layer=layer,
+                         affected=len(affected)):
+            regions: List[Tuple[int, int]] = []
+            for idx in sorted(affected):
+                size = len(updated[idx]) if idx in updated \
+                    else len(segs[idx].members)
+                lo = hi = idx
+                if size < self.cfg.s_min:
+                    lo, hi = self._extend_group(layer, idx, idx,
+                                                updated)
+                regions.append((lo, hi))
+            groups = self._merge_intervals(regions)
+            # pass 1 — plan right-to-left (the splice order): decide
+            # every group's partition before any mutation and collect
+            # the member tuples that need a fresh summary, in
+            # node-creation order
+            for lo, hi in reversed(groups):
+                items = []
+                for idx in range(lo, hi + 1):
+                    cur = updated[idx] if idx in updated \
+                        else segs[idx].members
+                    for nid in cur:
+                        items.append((self.nodes[nid].key, nid))
+                parts = partition_items(items, self.cfg.s_min,
+                                        self.cfg.s_max)
+                report.n_affected_segments += hi - lo + 1
+                old_by_members = {segs[i].members: segs[i]
+                                  for i in range(lo, hi + 1)}
+                old_parents = {segs[i].parent
+                               for i in range(lo, hi + 1)
+                               if segs[i].parent}
+                for part in parts:
+                    members = tuple(nid for _, nid in part)
+                    if members not in old_by_members:
+                        jobs.append(members)
+                plan.append((lo, hi, parts, old_by_members,
+                             old_parents))
 
         # ONE batched materialization for the whole layer update
         # (segments are disjoint, so member tuples are unique keys)
@@ -485,29 +498,31 @@ class EraGraph:
 
         # pass 2 — splice in plan (right-to-left) order so earlier
         # indices stay valid
-        t0 = time.perf_counter()
-        for lo, hi, parts, old_by_members, old_parents in plan:
-            new_segs: List[Segment] = []
-            new_parents: Set[str] = set()
-            for part in parts:
-                members = tuple(nid for _, nid in part)
-                reuse = old_by_members.get(members)
-                if reuse is not None:
-                    new_segs.append(reuse)
-                    if reuse.parent:
-                        new_parents.add(reuse.parent)
-                    continue
-                new_segs.append(Segment(
-                    members=members, min_key=part[0][0],
-                    parent=by_members[members]))
-                new_parents.add(by_members[members])
-            segs[lo:hi + 1] = new_segs
-            for seg in new_segs:
-                for nid in seg.members:
-                    self.member_seg[layer][nid] = seg
-            added_parents.extend(sorted(new_parents - old_parents))
-            removed_parents.extend(sorted(old_parents - new_parents))
-        report.time_partition += time.perf_counter() - t0
+        with timed_block(report, "time_partition", self.tracer,
+                         "partition", layer=layer, splice=True):
+            for lo, hi, parts, old_by_members, old_parents in plan:
+                new_segs: List[Segment] = []
+                new_parents: Set[str] = set()
+                for part in parts:
+                    members = tuple(nid for _, nid in part)
+                    reuse = old_by_members.get(members)
+                    if reuse is not None:
+                        new_segs.append(reuse)
+                        if reuse.parent:
+                            new_parents.add(reuse.parent)
+                        continue
+                    new_segs.append(Segment(
+                        members=members, min_key=part[0][0],
+                        parent=by_members[members]))
+                    new_parents.add(by_members[members])
+                segs[lo:hi + 1] = new_segs
+                for seg in new_segs:
+                    for nid in seg.members:
+                        self.member_seg[layer][nid] = seg
+                added_parents.extend(sorted(new_parents
+                                            - old_parents))
+                removed_parents.extend(sorted(old_parents
+                                              - new_parents))
 
         # drop removed parent nodes from the graph (paper: delete the
         # original node; children were adopted by the new summary node)
@@ -556,10 +571,11 @@ class EraGraph:
                 or layer >= self.cfg.max_layers)
         if stop:
             return [], [], report
-        t0 = time.perf_counter()
-        items = [(self.nodes[n].key, n) for n in ids]
-        parts = partition_items(items, self.cfg.s_min, self.cfg.s_max)
-        report.time_partition += time.perf_counter() - t0
+        with timed_block(report, "time_partition", self.tracer,
+                         "partition", layer=layer, new_layer=True):
+            items = [(self.nodes[n].key, n) for n in ids]
+            parts = partition_items(items, self.cfg.s_min,
+                                    self.cfg.s_max)
         report.n_new_layers += 1
         jobs = [tuple(nid for _, nid in part) for part in parts]
         parents = self._materialize_summaries(layer, jobs, report)

@@ -153,6 +153,7 @@ from repro.kernels.mips_topk.ops import MASK_BIAS, augment_queries, \
     flagged_mips_topk, merge_sharded_topk, mips_topk, sharded_mips_topk
 from repro.kernels.quantized_scan.ops import QuantSpec, encode_rows, \
     hyperplanes, quantized_flagged_topk, sharded_quantized_topk
+from repro.obs.trace import NULL_TRACER
 
 logger = logging.getLogger(__name__)
 
@@ -207,6 +208,11 @@ class StoreStats:
     # two-stage quantized retrieval: search launches served through the
     # coarse sign-bit scan + exact rescore instead of the dense scan
     quantized_scans: int = 0
+    # host-side jitted dispatches issued by THIS store's query paths
+    # (per-instance twin of the process-global kernel launch counter in
+    # kernels/mips_topk/ops — per-store so concurrently-live stores
+    # never bleed into each other's accounting)
+    kernel_launches: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -907,6 +913,11 @@ class _BaseStore:
     _group: _StackedBuffers
     _store_stats: StoreStats       # refresh / rebuild counters
 
+    # span recorder for the query/lifecycle paths; the owning EraRAG
+    # (or harness) swaps in its Observability tracer — the class-level
+    # default keeps standalone stores on the inert no-op path
+    tracer = NULL_TRACER
+
     def __init__(self, graph, compact_threshold: float):
         self._graph = graph
         self._version = -1          # graph version the index reflects
@@ -1059,11 +1070,18 @@ class _BaseStore:
         if mig is None:
             return
         if not mig.done:
-            mig.step()
+            desc = mig.describe()
+            with self.tracer.span("reshard_step", epoch=self.epoch,
+                                  built=desc["built"],
+                                  total=desc["total"]):
+                mig.step()
             self._store_stats.reshard_steps += 1
         if mig.done:
             self._migration = None
-            mig.install()
+            with self.tracer.span("reshard_install",
+                                  old_epoch=self.epoch,
+                                  new_epoch=self.epoch + 1):
+                mig.install()
 
     def _maybe_start_reshard(self) -> None:
         """Consult the attached lifecycle policy (skew / tombstone
@@ -1282,7 +1300,8 @@ class VectorStore(_BaseStore):
         (coarse Hamming over the code plane -> exact fp32 rescore of
         the top ``coarse_mult * k`` rows); the dense single-stage scan
         is the oracle and the fallback (flip ``self.quantized``)."""
-        self._refresh()
+        with self.tracer.span("route", epoch=self.epoch):
+            self._refresh()
         q = _check_queries(queries)
         if q.shape[0] == 0:
             return []
@@ -1297,15 +1316,24 @@ class VectorStore(_BaseStore):
             # with the exact scan, no special-cased fallback
             n_coarse = min(self.coarse_mult * k_eff,
                            self._group.capacity)
-            vals, idx = quantized_flagged_topk(
-                jnp.asarray(q), self._s.buf, self._group.codes_view(0),
-                k_eff, n_coarse, _filter_bias(layer_filter),
-                self._group.planes, self._group.quant)
+            # ONE fused launch covers coarse scan + exact rescore, so
+            # a single span (fused_rescore) covers both stages
+            with self.tracer.span("coarse_scan", epoch=self.epoch,
+                                  n=q.shape[0], k=k_eff,
+                                  fused_rescore=True):
+                vals, idx = quantized_flagged_topk(
+                    jnp.asarray(q), self._s.buf,
+                    self._group.codes_view(0),
+                    k_eff, n_coarse, _filter_bias(layer_filter),
+                    self._group.planes, self._group.quant)
             self._store_stats.quantized_scans += 1
         else:
-            vals, idx = flagged_mips_topk(
-                jnp.asarray(q), self._s.buf, k_eff,
-                _filter_bias(layer_filter))
+            with self.tracer.span("scan", epoch=self.epoch,
+                                  n=q.shape[0], k=k_eff):
+                vals, idx = flagged_mips_topk(
+                    jnp.asarray(q), self._s.buf, k_eff,
+                    _filter_bias(layer_filter))
+        self._store_stats.kernel_launches += 1
         vals = np.asarray(vals)
         idx = np.asarray(idx)
         out: List[List[Hit]] = []
@@ -1487,7 +1515,8 @@ class ShardedVectorStore(_BaseStore):
         """One collective ``sharded_mips_topk`` launch (default), or
         the per-shard dispatch loop + host merge when the collective is
         off; both bitwise identical to the single-buffer store."""
-        self._refresh()
+        with self.tracer.span("route", epoch=self.epoch):
+            self._refresh()
         q = _check_queries(queries)
         n_q = q.shape[0]
         if n_q == 0:
@@ -1507,16 +1536,25 @@ class ShardedVectorStore(_BaseStore):
                 # (C == cap => per-shard bitwise equality with exact)
                 n_coarse = max(min(self.coarse_mult * k_eff,
                                    grp.capacity), k_shard)
-                mv, ms = sharded_quantized_topk(
-                    jnp.asarray(q), grp.buf, grp.codes, grp.seq,
-                    grp.planes, k_shard, k_eff, n_coarse, bias,
-                    grp.quant, mesh=self.mesh,
-                    axis_names=self._axis_names)
+                with self.tracer.span("coarse_scan", epoch=self.epoch,
+                                      n=n_q, k=k_eff, collective=True,
+                                      fused_rescore=True):
+                    mv, ms = sharded_quantized_topk(
+                        jnp.asarray(q), grp.buf, grp.codes, grp.seq,
+                        grp.planes, k_shard, k_eff, n_coarse, bias,
+                        grp.quant, mesh=self.mesh,
+                        axis_names=self._axis_names)
                 self._store_stats.quantized_scans += 1
             else:
-                mv, ms = sharded_mips_topk(
-                    jnp.asarray(q), grp.buf, grp.seq, k_shard, k_eff,
-                    bias, mesh=self.mesh, axis_names=self._axis_names)
+                # scan + all_gather + merge fused in the ONE shard_map
+                # launch — a single span covers the pipeline
+                with self.tracer.span("scan", epoch=self.epoch,
+                                      n=n_q, k=k_eff, collective=True):
+                    mv, ms = sharded_mips_topk(
+                        jnp.asarray(q), grp.buf, grp.seq, k_shard,
+                        k_eff, bias, mesh=self.mesh,
+                        axis_names=self._axis_names)
+            self._store_stats.kernel_launches += 1
         else:
             mv, ms = self._loop_dispatch(q, k_eff, bias,
                                          quantized=quant)
@@ -1547,19 +1585,22 @@ class ShardedVectorStore(_BaseStore):
         q_dev = jnp.asarray(q)
         q_aug = None if quantized else augment_queries(q_dev, bias)
         pending: List[Tuple[_Shard, int, jnp.ndarray, jnp.ndarray]] = []
-        for sh in self._shards:
-            if sh.count == 0:
-                continue
-            k_s = min(k_eff, sh.capacity)
-            if quantized:
-                n_c = max(min(self.coarse_mult * k_eff, sh.capacity),
-                          k_s)
-                v, i = quantized_flagged_topk(
-                    q_dev, sh.buf, grp.codes_view(sh.slot), k_s, n_c,
-                    bias, grp.planes, grp.quant)
-            else:
-                v, i = mips_topk(q_aug, sh.buf, k_s)
-            pending.append((sh, k_s, v, i))
+        span = "coarse_scan" if quantized else "scan"
+        with self.tracer.span(span, epoch=self.epoch, n=q.shape[0],
+                              k=k_eff, collective=False):
+            for sh in self._shards:
+                if sh.count == 0:
+                    continue
+                k_s = min(k_eff, sh.capacity)
+                if quantized:
+                    n_c = max(min(self.coarse_mult * k_eff,
+                                  sh.capacity), k_s)
+                    v, i = quantized_flagged_topk(
+                        q_dev, sh.buf, grp.codes_view(sh.slot), k_s,
+                        n_c, bias, grp.planes, grp.quant)
+                else:
+                    v, i = mips_topk(q_aug, sh.buf, k_s)
+                pending.append((sh, k_s, v, i))
         val_blocks: List[np.ndarray] = []
         seq_blocks: List[np.ndarray] = []
         for sh, k_s, v, i in pending:
@@ -1574,7 +1615,11 @@ class ShardedVectorStore(_BaseStore):
         vals = jnp.asarray(np.stack(val_blocks))
         # int32 is exact: _renumber_seqs keeps every seq < _SEQ_LIMIT
         seqs = jnp.asarray(np.stack(seq_blocks).astype(np.int32))
-        return merge_sharded_topk(vals, seqs, k_eff)
+        # one dispatch per non-empty shard above, plus the merge below
+        self._store_stats.kernel_launches += len(pending) + 1
+        with self.tracer.span("merge", epoch=self.epoch,
+                              shards=len(pending)):
+            return merge_sharded_topk(vals, seqs, k_eff)
 
     # ------------------------------------------------------------------
     # lifecycle: atomic epoch swap (reshard commit)

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.data.chunker import Chunk, chunk_text
+from repro.obs.trace import NULL_TRACER
 
 
 class IngestQueueFull(RuntimeError):
@@ -60,6 +61,10 @@ class IngestStats:
     ticks: int = 0
     idle_ticks: int = 0
     max_queue_depth: int = 0
+    # producer-visible pressure events: submissions/removals refused
+    # at capacity (IngestQueueFull raised) and successful full drains
+    backpressure: int = 0
+    drains: int = 0
 
     def to_dict(self) -> Dict[str, int]:
         return dict(vars(self))
@@ -95,6 +100,10 @@ class IngestService:
     the replay log: applying it to a fresh index via ``insert_docs`` /
     ``remove_docs`` reproduces this index bitwise.
     """
+
+    # span recorder for the ingest path; RAGPipeline swaps in the
+    # pipeline's Observability tracer (inert no-op by default)
+    tracer = NULL_TRACER
 
     def __init__(self, rag, max_pending_docs: Optional[int] = None,
                  docs_per_tick: Optional[int] = None,
@@ -136,6 +145,7 @@ class IngestService:
         """Queue one document for ingestion.  Raises
         ``IngestQueueFull`` at capacity (producer backpressure)."""
         if self.pending_docs >= self.max_pending_docs:
+            self.stats.backpressure += 1
             raise IngestQueueFull(
                 f"{self.pending_docs} docs pending "
                 f"(max {self.max_pending_docs})")
@@ -165,6 +175,7 @@ class IngestService:
 
     def _check_op_capacity(self) -> None:
         if self.pending_ops >= self.max_pending_ops:
+            self.stats.backpressure += 1
             raise IngestQueueFull(
                 f"{self.pending_ops} ops pending "
                 f"(max {self.max_pending_ops})")
@@ -175,6 +186,13 @@ class IngestService:
         name (``idle | chunk | embed | commit | remove``).  An idle
         tick still runs one store ``refresh()`` so off-path maintenance
         (compaction staging, migration steps) keeps moving."""
+        with self.tracer.span("ingest_tick") as sp:
+            stage = self._tick()
+            if sp is not None:
+                sp.attrs["stage"] = stage
+        return stage
+
+    def _tick(self) -> str:
         self.stats.ticks += 1
         if not self._ops:
             self.stats.idle_ticks += 1
@@ -246,6 +264,7 @@ class IngestService:
                 f"drain stopped after {n} ticks with "
                 f"{self.pending_ops} ops ({self.pending_docs} docs) "
                 f"still queued")
+        self.stats.drains += 1
         return n
 
     # -- reporting -----------------------------------------------------

@@ -11,6 +11,14 @@ The counter accounts DIRECT (host-level) calls only: a public op
 traced inside someone else's jit bumps once at trace time, not per
 execution, so callers that jit over these ops should count their own
 outer dispatches (the store's query paths call the ops directly).
+
+The counter itself is owned by the process-global obs registry
+(``kernels.mips_topk.launches``); ``launch_count`` /
+``reset_launch_count`` remain as thin shims over it.  It is
+process-scoped BY DESIGN — per-store attribution lives on each
+store's own ``StoreStats.kernel_launches``, so concurrently-live
+stores cannot bleed into each other's accounting (see
+``tests/test_obs.py``).
 """
 from __future__ import annotations
 
@@ -25,22 +33,13 @@ from repro.kernels.common import interpret_default, on_tpu, \
     shard_map_collective
 from repro.kernels.mips_topk import ref
 from repro.kernels.mips_topk.kernel import mips_topk_pallas
+from repro.obs.metrics import global_registry
 
-
-class _LaunchCounter:
-    """Host-dispatch counter for the retrieval query path."""
-
-    __slots__ = ("count",)
-
-    def __init__(self) -> None:
-        self.count = 0
-
-
-_LAUNCHES = _LaunchCounter()
+_LAUNCHES = global_registry().counter("kernels.mips_topk.launches")
 
 
 def reset_launch_count() -> None:
-    _LAUNCHES.count = 0
+    _LAUNCHES.reset()
 
 
 def launch_count() -> int:
@@ -68,7 +67,7 @@ def mips_topk(q: jnp.ndarray, db: jnp.ndarray, k: int, *,
               interpret: bool | None = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k inner products of each query row against the DB rows."""
-    _LAUNCHES.count += 1
+    _LAUNCHES.inc()
     return _mips_topk(q, db, k, use_pallas=use_pallas,
                       interpret=interpret)
 
@@ -147,7 +146,7 @@ def merge_sharded_topk(vals: jnp.ndarray, idx: jnp.ndarray,
     ``jax.lax.top_k`` over the unsharded DB, whose tie-break is also
     lowest-index-first.
     """
-    _LAUNCHES.count += 1
+    _LAUNCHES.inc()
     return _merge_sharded_topk(vals, idx, k)
 
 
@@ -212,7 +211,7 @@ def sharded_mips_topk(q: jnp.ndarray, db_stacked: jnp.ndarray,
     s, cap, _ = db_stacked.shape
     assert k_shard <= cap and s * k_shard >= k_out, \
         (db_stacked.shape, k_shard, k_out)
-    _LAUNCHES.count += 1
+    _LAUNCHES.inc()
     return _sharded_mips_topk(
         q, db_stacked, seq_stacked, k_shard=int(k_shard),
         k_out=int(k_out), flag_bias=tuple(flag_bias), mesh=mesh,

@@ -284,7 +284,7 @@ def quantized_flagged_topk(q: jnp.ndarray, db_flagged: jnp.ndarray,
         (k, n_coarse, db_flagged.shape)
     assert codes.shape == (db_flagged.shape[0], spec.n_words), \
         (codes.shape, db_flagged.shape, spec)
-    mips_ops._LAUNCHES.count += 1
+    mips_ops._LAUNCHES.inc()
     return _quantized_flagged_topk(
         q, db_flagged, codes, planes, k=int(k), n_coarse=int(n_coarse),
         flag_bias=tuple(flag_bias), spec=spec, use_pallas=use_pallas,
@@ -348,7 +348,7 @@ def sharded_quantized_topk(q: jnp.ndarray, db_stacked: jnp.ndarray,
         (codes_stacked.shape, db_stacked.shape, spec)
     assert k_shard <= n_coarse <= cap and s * k_shard >= k_out, \
         (db_stacked.shape, k_shard, n_coarse, k_out)
-    mips_ops._LAUNCHES.count += 1
+    mips_ops._LAUNCHES.inc()
     return _sharded_quantized_topk(
         q, db_stacked, codes_stacked, seq_stacked, planes,
         k_shard=int(k_shard), k_out=int(k_out),

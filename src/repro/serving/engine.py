@@ -60,6 +60,7 @@ import numpy as np
 from repro.common.config import LMConfig
 from repro.data.tokenizer import BOS_ID, EOS_ID, HashTokenizer
 from repro.models import transformer as T
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -84,6 +85,10 @@ class _Slot:
 
 
 class Engine:
+    # span recorder for the serving path; RAGPipeline swaps in the
+    # pipeline's Observability tracer (inert no-op by default)
+    tracer = NULL_TRACER
+
     def __init__(self, cfg: LMConfig, params, ecfg: EngineConfig,
                  tokenizer: Optional[HashTokenizer] = None):
         self.cfg = cfg
@@ -288,8 +293,11 @@ class Engine:
             for j, (_, _, ids, *_rest) in enumerate(group):
                 tokens[j, :len(ids)] = ids
                 lengths[j] = len(ids)
-            logits, cache = self._prefill_bucket(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths))
+            with self.tracer.span("prefill", bucket=blen,
+                                  prompts=len(group), prefix_hit=False):
+                logits, cache = self._prefill_bucket(
+                    self.params, jnp.asarray(tokens),
+                    jnp.asarray(lengths))
             self.stats["prefill_launches"] += 1
             self.stats["prefill_prompts"] += len(group)
             dst = jnp.asarray([i for i, *_ in group], jnp.int32)
@@ -346,9 +354,12 @@ class Engine:
                 tokens[i, :len(suf)] = suf
                 lengths[i] = len(suf)
                 offsets[i] = plen
-            logits, new_caches = self._prefill_extend(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-                jnp.asarray(offsets), self.caches)
+            with self.tracer.span("prefill", bucket=blen,
+                                  prompts=len(group), prefix_hit=True):
+                logits, new_caches = self._prefill_extend(
+                    self.params, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(offsets),
+                    self.caches)
             rows = jnp.asarray([i for i, *_ in group], jnp.int32)
 
             def keep_rows(old, new):
@@ -388,9 +399,11 @@ class Engine:
             tok = np.zeros((self.ecfg.max_batch, 1), dtype=np.int32)
             for i in idxs:
                 tok[i, 0] = self.slots[i].out_tokens[-1]
-            logits, new_caches = self._decode_step(
-                self.params, jnp.asarray(tok), self.caches,
-                jnp.int32(length))
+            with self.tracer.span("decode", length=length,
+                                  slots=len(idxs)):
+                logits, new_caches = self._decode_step(
+                    self.params, jnp.asarray(tok), self.caches,
+                    jnp.int32(length))
             rows = jnp.asarray(np.asarray(idxs, np.int32))
 
             def keep_rows(old, new):

@@ -54,7 +54,6 @@ harness itself adds no randomness, so a run is exactly replayable.
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -63,7 +62,9 @@ import numpy as np
 from repro.common.config import EraRAGConfig
 from repro.core.erarag import EraRAG
 from repro.ingest import IngestService
+from repro.kernels.mips_topk import ops as mips_ops
 from repro.lifecycle import LifecycleManager, LifecyclePolicy
+from repro.obs import clock
 from repro.serving.rag_pipeline import RAGPipeline
 
 
@@ -216,7 +217,7 @@ class LiveHarness:
 
     # -- subsystem counter plumbing ------------------------------------
     _STORE_KEYS = ("refreshes", "compactions", "reshard_steps",
-                   "rows_tombstoned")
+                   "rows_tombstoned", "kernel_launches")
 
     def _counters(self) -> Dict[str, float]:
         """Monotonic per-subsystem counters (these live on objects that
@@ -373,8 +374,15 @@ class LiveHarness:
         report: dict = {"seed": self.schedule.seed, "phases": [],
                         "migration": None}
         prev = self._counters()
-        for phase in self.schedule.phases:
-            lat: List[float] = []
+        reg, tr = rag.obs.registry, rag.obs.tracer
+        prev_spans = tr.total_spans
+        prev_kernel = mips_ops.launch_count()
+        for pi, phase in enumerate(self.schedule.phases):
+            # phase-INDEXED histogram names: a schedule may repeat a
+            # phase name, and percentiles must stay per-phase, not
+            # accumulate across same-named phases
+            hist = reg.histogram(
+                f"serving.latency.{pi:02d}_{phase.name}")
             n_answers = 0
             for ev in phase.events:
                 kind = ev[0]
@@ -383,9 +391,9 @@ class LiveHarness:
                 elif kind == "remove":
                     svc.remove(ev[1])
                 elif kind == "query":
-                    t0 = time.perf_counter()
+                    t0 = clock.now()
                     ans = pipe.answer_batch(ev[1], mode=ev[2])
-                    lat.append(time.perf_counter() - t0)
+                    hist.observe(clock.now() - t0)
                     n_answers += len(ans)
                 elif kind == "snapshot":
                     svc.drain()
@@ -394,6 +402,9 @@ class LiveHarness:
                     svc.drain()
                     self._bank_store()
                     rag.store = mgr.restore(rag.graph)
+                    # restore swaps in a NEW store object — re-attach
+                    # the run's tracer or its spans go to NULL_TRACER
+                    rag.store.tracer = rag.obs.tracer
                     self._store_prev = {k: int(getattr(
                         rag.store.stats, k))
                         for k in self._STORE_KEYS}
@@ -412,13 +423,22 @@ class LiveHarness:
             cur = self._counters()
             entry = {
                 "name": phase.name, "events": len(phase.events),
-                "query_batches": len(lat), "answers": n_answers,
+                "query_batches": hist.count, "answers": n_answers,
                 "launches": {k: cur.get(k, 0) - prev.get(k, 0)
-                             for k in cur}}
-            if lat:
-                q = np.asarray(lat)
-                entry["p50_ms"] = float(np.percentile(q, 50) * 1e3)
-                entry["p99_ms"] = float(np.percentile(q, 99) * 1e3)
+                             for k in cur},
+                # per-phase obs movement: spans recorded (0 unless
+                # cfg.obs_trace) and process-global kernel dispatches
+                "obs": {
+                    "spans": tr.total_spans - prev_spans,
+                    "kernel_launches":
+                        mips_ops.launch_count() - prev_kernel}}
+            prev_spans = tr.total_spans
+            prev_kernel = mips_ops.launch_count()
+            if hist.count:
+                # exact np.percentile over the phase's raw samples,
+                # now read back from the shared registry histogram
+                entry["p50_ms"] = hist.percentile(50) * 1e3
+                entry["p99_ms"] = hist.percentile(99) * 1e3
             report["phases"].append(entry)
             prev = cur
         svc.drain()

@@ -26,6 +26,8 @@ from typing import List, Optional, Sequence, Tuple
 from repro.core.erarag import EraRAG
 from repro.core.retrieve import Retrieval, compose_hop_query, \
     default_bridge_fn, is_hop_question
+from repro.obs.schema import INDEX_REPORT_SCHEMA
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -92,6 +94,29 @@ class RAGPipeline:
         self.reader = reader or ExtractiveReader()
         self.engine = engine  # optional LM reader
         self.ingest = ingest  # optional repro.ingest.IngestService
+        self._wire_obs()
+
+    def _wire_obs(self) -> None:
+        """Hand the pipeline's subsystems to the EraRAG observability
+        layer: the (possibly null) tracer flows onto the engine and
+        the ingest service, and live *collectors* land on the metrics
+        registry so ``index_report()`` is a view over it.  Collectors
+        close over ``self`` — never over a store/engine object — so
+        reshard/restore store swaps need no re-registration."""
+        obs = self.rag.obs
+        if self.engine is not None:
+            self.engine.tracer = obs.tracer
+        if self.ingest is not None:
+            self.ingest.tracer = obs.tracer
+        reg = obs.registry
+        reg.register_collector("store", self._collect_store)
+        reg.register_collector("retrieval", self._collect_retrieval)
+        reg.register_collector("query_cache", self._collect_query_cache)
+        reg.register_collector("prefix_cache", self._collect_prefix_cache)
+        reg.register_collector("ingest", self._collect_ingest)
+        reg.register_collector("launches", self._collect_launches)
+        reg.register_collector("obs", self._collect_obs)
+        reg.declare_many(INDEX_REPORT_SCHEMA)
 
     def attach_ingest(self, service) -> None:
         """Attach a streaming ``IngestService`` so its queue/commit
@@ -99,63 +124,84 @@ class RAGPipeline:
         loop interleaves ``service.tick()`` with ``answer_batch`` calls
         — the service never runs threads of its own."""
         self.ingest = service
+        self.ingest.tracer = self.rag.obs.tracer
 
-    def index_report(self) -> dict:
-        """Serving-side index health: size + refresh counters, the
-        lifecycle ``ShardLoadReport`` (per-shard live-row / tombstone /
-        query-hit skew, routing-cache counters, epoch, in-flight
-        reshard migration), plus the per-shard breakdown when the
-        store is sharded over the data mesh axis (dashboards /
-        capacity planning / reshard decisions)."""
+    # -- registry collectors (live views, read at collection time) -----
+    def _collect_store(self) -> dict:
+        """Index health: size + refresh counters, the lifecycle
+        ``ShardLoadReport`` (per-shard live-row / tombstone / query-hit
+        skew, routing-cache counters, epoch, in-flight reshard
+        migration), plus the per-shard breakdown when the store is
+        sharded over the data mesh axis."""
         from repro.lifecycle.report import ShardLoadReport
         store = self.rag.store
-        report = {"size": store.size, "stats": dict(vars(store.stats)),
-                  "retrieval_rounds":
-                      self.rag.stats["retrieval_rounds"],
-                  "epoch": store.epoch,
-                  "load": ShardLoadReport.from_store(store).to_dict()}
+        out = {"size": store.size, "stats": dict(vars(store.stats)),
+               "epoch": store.epoch,
+               "load": ShardLoadReport.from_store(store).to_dict()}
         # two-stage quantized retrieval: whether searches serve through
         # the coarse sign-bit scan, and at what candidate multiplier
         # (the stats dict above carries the `quantized_scans` counter)
-        report["quantized_scan"] = bool(
+        out["quantized_scan"] = bool(
             getattr(store, "quantized", False)
             and store._group.quant is not None)
-        # serving-path caches: semantic query-cache movement counters
-        # (epoch-invalidated retrieval reuse) and, with an LM reader
-        # attached, the engine's KV prefix-reuse counters
-        if self.rag.query_cache is not None:
-            report["query_cache"] = \
-                self.rag.query_cache.stats.to_dict()
-        if self.engine is not None:
-            report["prefix_cache"] = {
-                "hits": self.engine.stats["prefix_hits"],
-                "tokens_saved":
-                    self.engine.stats["prefix_tokens_saved"],
-                "entries": len(self.engine._prefix_cache)}
-        # write-path health: summary-cache movement (content-keyed
-        # segment-summary reuse) and, when a streaming IngestService is
-        # attached, its queue depth / burst-commit counters
-        ingest: dict = {}
+        if out["quantized_scan"]:
+            out["coarse_mult"] = store.coarse_mult
+            out["scan_bits"] = store.scan_bits
+        if hasattr(store, "shard_report"):
+            out["shards"] = store.shard_report()
+            # dispatch mode + rotating-compaction state: a dashboard
+            # can tell one-launch collective serving from the fallback
+            # loop, and see which shard's swap is staged off-path
+            out["collective_query"] = store.collective_active
+            out["pending_compaction"] = store.pending_compaction
+        return out
+
+    def _collect_retrieval(self) -> dict:
+        return {"rounds": self.rag.stats["retrieval_rounds"]}
+
+    def _collect_query_cache(self) -> dict:
+        """Semantic query-cache movement counters (epoch-invalidated
+        retrieval reuse); empty when the cache is disabled."""
+        qc = self.rag.query_cache
+        return qc.stats.to_dict() if qc is not None else {}
+
+    def _collect_prefix_cache(self) -> dict:
+        """Engine KV prefix-reuse counters; empty without an LM reader."""
+        eng = self.engine
+        if eng is None:
+            return {}
+        return {"hits": eng.stats["prefix_hits"],
+                "tokens_saved": eng.stats["prefix_tokens_saved"],
+                "entries": len(eng._prefix_cache)}
+
+    def _collect_ingest(self) -> dict:
+        """Write-path health: summary-cache movement (content-keyed
+        segment-summary reuse) and, when a streaming IngestService is
+        attached, its queue depth / burst-commit counters."""
+        out: dict = {}
         if self.rag.graph.summary_cache is not None:
-            ingest["summary_cache"] = \
+            out["summary_cache"] = \
                 self.rag.graph.summary_cache.stats.to_dict()
-            ingest["summary_cache_entries"] = \
+            out["summary_cache_entries"] = \
                 len(self.rag.graph.summary_cache)
         if self.ingest is not None:
-            ingest["service"] = self.ingest.report()
-        if ingest:
-            report["ingest"] = ingest
-        # per-subsystem launch accounting (live-serving harness): how
-        # many times each backend was actually dispatched — embedder
-        # encode calls, summarizer materializations, retrieval sweep
-        # rounds, store maintenance turns, and (with an LM reader)
-        # engine prefill/decode launches
+            out["service"] = self.ingest.report()
+        return out
+
+    def _collect_launches(self) -> dict:
+        """Per-subsystem launch accounting (live-serving harness): how
+        many times each backend was actually dispatched — embedder
+        encode calls, summarizer materializations, retrieval sweep
+        rounds, store maintenance turns and kernel dispatches, and
+        (with an LM reader) engine prefill/decode launches."""
+        store = self.rag.store
         launches = {
             "retrieval_rounds": self.rag.stats["retrieval_rounds"],
             "store": {"refreshes": store.stats.refreshes,
                       "compactions": store.stats.compactions,
                       "reshard_steps": store.stats.reshard_steps,
-                      "quantized_scans": store.stats.quantized_scans}}
+                      "quantized_scans": store.stats.quantized_scans,
+                      "kernel_launches": store.stats.kernel_launches}}
         emb_stats = getattr(self.rag.graph.embedder, "stats", None)
         if emb_stats is not None:
             launches["embedder"] = dict(emb_stats)
@@ -168,17 +214,37 @@ class RAGPipeline:
                     self.engine.stats["decode_launches"],
                 "generate_batches":
                     self.engine.stats["generate_batches"]}
-        report["launches"] = launches
-        if report["quantized_scan"]:
-            report["coarse_mult"] = store.coarse_mult
-            report["scan_bits"] = store.scan_bits
-        if hasattr(store, "shard_report"):
-            report["shards"] = store.shard_report()
-            # dispatch mode + rotating-compaction state: a dashboard
-            # can tell one-launch collective serving from the fallback
-            # loop, and see which shard's swap is staged off-path
-            report["collective_query"] = store.collective_active
-            report["pending_compaction"] = store.pending_compaction
+        return launches
+
+    def _collect_obs(self) -> dict:
+        """Tracer accounting — only surfaced when tracing is enabled,
+        so the default counters-only report is unchanged."""
+        tr = self.rag.obs.tracer
+        if tr is NULL_TRACER:
+            return {}
+        return {"spans": tr.total_spans, "spans_dropped": tr.dropped}
+
+    def index_report(self) -> dict:
+        """Serving-side index health as a view over the obs registry:
+        every section is one registered collector (``store``,
+        ``retrieval``, ``query_cache``, ``prefix_cache``, ``ingest``,
+        ``launches``, ``obs``), read live at call time.  The same
+        collectors back ``registry.snapshot()`` and
+        ``registry.to_prometheus()``, so the report, the flat metric
+        view, and the text exposition cannot drift apart.  Every
+        numeric key is declared in ``obs.schema.INDEX_REPORT_SCHEMA``
+        (the drift check in tests/test_obs.py enforces it)."""
+        reg = self.rag.obs.registry
+        report = dict(reg.collect("store"))
+        report["retrieval_rounds"] = reg.collect("retrieval")["rounds"]
+        for section in ("query_cache", "prefix_cache", "ingest"):
+            got = reg.collect(section)
+            if got:
+                report[section] = got
+        report["launches"] = reg.collect("launches")
+        obs = reg.collect("obs")
+        if obs:
+            report["obs"] = obs
         return report
 
     @staticmethod
@@ -245,18 +311,21 @@ class RAGPipeline:
             rets = [self.rag.query(q, mode="multihop",
                                    bridge_fn=bridge_fn)
                     for q in questions]
-        if self.engine is not None:
-            prompts = [self._prompt(q, r.context)
-                       for q, r in zip(questions, rets)]
-            prefixes = [self._prefix(r.context) for r in rets]
-            texts = (self.engine.generate_batch(prompts,
-                                                prefixes=prefixes)
-                     if batched
-                     else [self.engine.generate(p, prefix=px)
-                           for p, px in zip(prompts, prefixes)])
-        else:
-            texts = [self.reader.answer(r.bridge_query or q, r.context)
-                     for q, r in zip(questions, rets)]
+        with self.rag.obs.tracer.span("compose", n=len(questions),
+                                      multihop=True):
+            if self.engine is not None:
+                prompts = [self._prompt(q, r.context)
+                           for q, r in zip(questions, rets)]
+                prefixes = [self._prefix(r.context) for r in rets]
+                texts = (self.engine.generate_batch(prompts,
+                                                    prefixes=prefixes)
+                         if batched
+                         else [self.engine.generate(p, prefix=px)
+                               for p, px in zip(prompts, prefixes)])
+            else:
+                texts = [self.reader.answer(r.bridge_query or q,
+                                            r.context)
+                         for q, r in zip(questions, rets)]
         return [RAGAnswer(answer=t, context=r.context,
                           n_context_tokens=r.n_tokens,
                           hits=len(r.hits),
@@ -267,17 +336,22 @@ class RAGPipeline:
                ) -> RAGAnswer:
         """Per-question oracle path: sequential rounds, B=1 launches —
         ``answer_batch`` must match it answer-for-answer."""
-        if mode == "multihop" or (self.engine is None
-                                  and is_hop_question(question)):
-            return self._multihop([question], batched=False)[0]
-        r = self.rag.query(question, mode=mode)
-        text = (self.engine.generate(self._prompt(question, r.context),
-                                     prefix=self._prefix(r.context))
-                if self.engine is not None
-                else self.reader.answer(question, r.context))
-        return RAGAnswer(answer=text, context=r.context,
-                         n_context_tokens=r.n_tokens, hits=len(r.hits),
-                         epoch=getattr(r, "epoch", 0))
+        tr = self.rag.obs.tracer
+        with tr.span("query", n=1, mode=mode):
+            if mode == "multihop" or (self.engine is None
+                                      and is_hop_question(question)):
+                return self._multihop([question], batched=False)[0]
+            r = self.rag.query(question, mode=mode)
+            with tr.span("compose", n=1):
+                text = (self.engine.generate(
+                            self._prompt(question, r.context),
+                            prefix=self._prefix(r.context))
+                        if self.engine is not None
+                        else self.reader.answer(question, r.context))
+            return RAGAnswer(answer=text, context=r.context,
+                             n_context_tokens=r.n_tokens,
+                             hits=len(r.hits),
+                             epoch=getattr(r, "epoch", 0))
 
     def answer_batch(self, questions: Sequence[str],
                      mode: str = "collapsed") -> List[RAGAnswer]:
@@ -291,30 +365,36 @@ class RAGPipeline:
         questions = list(questions)
         if not questions:
             return []
-        if mode == "multihop":
-            return self._multihop(questions, batched=True)
-        out: List[Optional[RAGAnswer]] = [None] * len(questions)
-        hop = [i for i, q in enumerate(questions)
-               if self.engine is None and is_hop_question(q)]
-        plain = [i for i in range(len(questions)) if i not in set(hop)]
-        if plain:
-            rets = self.rag.query_batch([questions[i] for i in plain],
-                                        mode=mode)
-            if self.engine is not None:
-                texts = self.engine.generate_batch(
-                    [self._prompt(questions[i], r.context)
-                     for i, r in zip(plain, rets)],
-                    prefixes=[self._prefix(r.context) for r in rets])
-            else:
-                texts = [self.reader.answer(questions[i], r.context)
-                         for i, r in zip(plain, rets)]
-            for i, r, text in zip(plain, rets, texts):
-                out[i] = RAGAnswer(answer=text, context=r.context,
-                                   n_context_tokens=r.n_tokens,
-                                   hits=len(r.hits),
-                                   epoch=getattr(r, "epoch", 0))
-        if hop:
-            for i, ans in zip(hop, self._multihop(
-                    [questions[i] for i in hop], batched=True)):
-                out[i] = ans
+        tr = self.rag.obs.tracer
+        with tr.span("query", n=len(questions), mode=mode):
+            if mode == "multihop":
+                return self._multihop(questions, batched=True)
+            out: List[Optional[RAGAnswer]] = [None] * len(questions)
+            hop = [i for i, q in enumerate(questions)
+                   if self.engine is None and is_hop_question(q)]
+            plain = [i for i in range(len(questions))
+                     if i not in set(hop)]
+            if plain:
+                rets = self.rag.query_batch(
+                    [questions[i] for i in plain], mode=mode)
+                with tr.span("compose", n=len(plain)):
+                    if self.engine is not None:
+                        texts = self.engine.generate_batch(
+                            [self._prompt(questions[i], r.context)
+                             for i, r in zip(plain, rets)],
+                            prefixes=[self._prefix(r.context)
+                                      for r in rets])
+                    else:
+                        texts = [self.reader.answer(questions[i],
+                                                    r.context)
+                                 for i, r in zip(plain, rets)]
+                for i, r, text in zip(plain, rets, texts):
+                    out[i] = RAGAnswer(answer=text, context=r.context,
+                                       n_context_tokens=r.n_tokens,
+                                       hits=len(r.hits),
+                                       epoch=getattr(r, "epoch", 0))
+            if hop:
+                for i, ans in zip(hop, self._multihop(
+                        [questions[i] for i in hop], batched=True)):
+                    out[i] = ans
         return out  # type: ignore[return-value]
